@@ -1,0 +1,47 @@
+"""Fig. 11 — E2E latency by device across the paper's 54-workload grid.
+
+Qwen3 {0.6B, 1.7B, 8B} x {q8_0, q3_k_s} x [in:out] in {[8:1],[16:4],[32:16]}
+on IMAX FPGA (measured-equivalent analytical), IMAX 28nm projection, and the
+three GPU platforms (TDP+roofline device models).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.analysis.power import DEVICE_POWER, gpu_metrics
+from repro.configs.registry import PAPER_MODELS
+from repro.core.imax_model import asic_28nm, fpga_prototype
+from repro.core.quant.formats import FORMATS
+
+WORKLOADS = [(8, 1), (16, 4), (32, 16)]
+QUANTS = ["fp16", "q8_0", "q3_k_s"]
+
+
+def model_bytes(cfg, quant: str) -> float:
+    fmt = {"q8_0": "q8_0", "q3_k_s": "q3_k", "fp16": "fp16"}[quant]
+    return cfg.param_counts()["total"] * FORMATS[fmt].logical_bpw / 8.0
+
+
+def main() -> None:
+    fpga = fpga_prototype()
+    asic = asic_28nm()
+    for mname, cfg in PAPER_MODELS.items():
+        for quant in QUANTS:
+            for n_in, n_out in WORKLOADS:
+                wl = f"{mname}-{quant}-[{n_in}:{n_out}]"
+                rf = fpga.e2e(cfg, quant, n_in, n_out)
+                ra = asic.e2e(cfg, quant, n_in, n_out)
+                emit(f"e2e_latency/imax_fpga/{wl}", rf["latency_s"] * 1e6,
+                     f"latency_s={rf['latency_s']:.3f}")
+                emit(f"e2e_latency/imax_28nm/{wl}", ra["latency_s"] * 1e6,
+                     f"latency_s={ra['latency_s']:.3f}")
+                mb = model_bytes(cfg, quant)
+                act = cfg.param_counts()["active"]
+                for dev_id, dev in DEVICE_POWER.items():
+                    g = gpu_metrics(dev, mb, act, n_in, n_out)
+                    emit(f"e2e_latency/{dev_id}/{wl}",
+                         g["latency_s"] * 1e6,
+                         f"latency_s={g['latency_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig. 16 — scalability vs compute lanes (1..8).
+
+Paper finding: performance saturates at 2 lanes and then DEGRADES, because
+the dual-core ARM host cannot manage data transfers/control for more lanes
+(the 2-lane configuration used throughout is therefore the sweet spot).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.registry import PAPER_MODELS
+from repro.core.imax_model import asic_28nm
+
+
+def main() -> None:
+    cfg = PAPER_MODELS["qwen3-0.6b"]
+    results = {}
+    for lanes in [1, 2, 4, 8]:
+        r = asic_28nm(lanes=lanes).e2e(cfg, "q8_0", 32, 16)
+        results[lanes] = r
+        emit(f"lane_scaling/qwen3-0.6b-q8_0/{lanes}lanes",
+             r["latency_s"] * 1e6,
+             f"latency_s={r['latency_s']:.2f} pdp_j={r['pdp_j']:.2f}")
+    best = min(results, key=lambda k: results[k]["latency_s"])
+    degrades = results[8]["latency_s"] > results[2]["latency_s"]
+    emit("lane_scaling/qwen3-0.6b-q8_0/summary", 0.0,
+         f"fastest={best}lanes degrades_beyond_2={degrades} "
+         f"(paper: saturates at 2, degrades beyond)")
+
+
+if __name__ == "__main__":
+    main()

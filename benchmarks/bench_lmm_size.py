@@ -1,0 +1,31 @@
+"""Fig. 14 — LMM size vs energy efficiency (PDP), 16..512 KB.
+
+Paper finding: 64 KB is the PDP-optimal point — beyond it the linear
+static-power growth outweighs the marginal transfer win. The TPU analog
+(Pallas BlockSpec block-size sweep) is reported by §Perf in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.registry import PAPER_MODELS
+from repro.core.imax_model import asic_28nm
+
+LMM_SIZES = [16, 32, 64, 128, 256, 512]
+
+
+def main() -> None:
+    for mname, cfg in PAPER_MODELS.items():
+        for quant in ["q8_0", "q3_k_s"]:
+            best = None
+            for kb in LMM_SIZES:
+                r = asic_28nm(lmm_kb=kb).e2e(cfg, quant, 32, 16)
+                emit(f"lmm_size/{mname}-{quant}/{kb}KB",
+                     r["latency_s"] * 1e6, f"pdp_j={r['pdp_j']:.2f}")
+                if best is None or r["pdp_j"] < best[1]:
+                    best = (kb, r["pdp_j"])
+            emit(f"lmm_size/{mname}-{quant}/optimal", 0.0,
+                 f"best_kb={best[0]} (paper: 64KB PDP-optimal for most)")
+
+
+if __name__ == "__main__":
+    main()

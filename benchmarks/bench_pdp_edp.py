@@ -1,0 +1,82 @@
+"""Fig. 12/13 — PDP and EDP by device (+ the paper's headline ratios).
+
+Validates the paper's key claims:
+  * Qwen3-1.7B Q8_0 [16:4]: IMAX 15.5 J vs 4090 28.4 / 1080Ti 35.1 /
+    Jetson 22.1 (PDP)
+  * PDP improvement up to 44.4x (vs 4090), 54x (vs 1080Ti), 13.6x (Jetson)
+  * EDP improvement up to 11.5x (vs 4090), 15x (vs 1080Ti)
+  * Qwen3-8B Q8_0 [32:16] reversal: IMAX PDP 1148.7 J > 4090 547.9 /
+    Jetson 378.0 (transfer-bound regime)
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, vs_paper
+from benchmarks.bench_e2e_latency import WORKLOADS, QUANTS, model_bytes
+from repro.analysis.power import DEVICE_POWER, gpu_metrics
+from repro.configs.registry import PAPER_MODELS
+from repro.core.imax_model import asic_28nm
+
+PAPER_ANCHORS = {
+    # (model, quant, in, out) -> {metric: paper value}
+    ("qwen3-1.7b", "q8_0", 16, 4): {"imax_pdp": 15.5, "rtx4090_pdp": 28.4,
+                                    "gtx1080ti_pdp": 35.1,
+                                    "jetson_agx_orin_pdp": 22.1},
+    ("qwen3-8b", "q8_0", 32, 16): {"imax_pdp": 1148.7,
+                                   "rtx4090_pdp": 547.9,
+                                   "jetson_agx_orin_pdp": 378.0},
+    ("qwen3-1.7b", "q8_0", 32, 16): {"imax_lat": 14.7, "imax_edp": 413.6,
+                                     "jetson_agx_orin_lat": 1.9,
+                                     "jetson_agx_orin_edp": 216.6},
+}
+
+
+def main() -> None:
+    asic = asic_28nm()
+    best_pdp_ratio = {}
+    best_edp_ratio = {}
+    for mname, cfg in PAPER_MODELS.items():
+        for quant in QUANTS:
+            for n_in, n_out in WORKLOADS:
+                wl = f"{mname}-{quant}-[{n_in}:{n_out}]"
+                r = asic.e2e(cfg, quant, n_in, n_out)
+                emit(f"pdp/imax_28nm/{wl}", r["latency_s"] * 1e6,
+                     f"pdp_j={r['pdp_j']:.2f}")
+                emit(f"edp/imax_28nm/{wl}", r["latency_s"] * 1e6,
+                     f"edp_js={r['edp_js']:.2f}")
+                mb = model_bytes(cfg, quant)
+                act = cfg.param_counts()["active"]
+                for dev_id, dev in DEVICE_POWER.items():
+                    g = gpu_metrics(dev, mb, act, n_in, n_out)
+                    emit(f"pdp/{dev_id}/{wl}", g["latency_s"] * 1e6,
+                         f"pdp_j={g['pdp_j']:.2f}")
+                    rp = g["pdp_j"] / max(r["pdp_j"], 1e-9)
+                    re = g["edp_js"] / max(r["edp_js"], 1e-9)
+                    best_pdp_ratio[dev_id] = max(
+                        best_pdp_ratio.get(dev_id, 0.0), rp)
+                    best_edp_ratio[dev_id] = max(
+                        best_edp_ratio.get(dev_id, 0.0), re)
+                key = (mname, quant, n_in, n_out)
+                if key in PAPER_ANCHORS:
+                    a = PAPER_ANCHORS[key]
+                    if "imax_pdp" in a:
+                        emit(f"pdp/anchor/{wl}", 0.0,
+                             vs_paper(r["pdp_j"], a["imax_pdp"]))
+                    if "imax_lat" in a:
+                        emit(f"latency/anchor/{wl}", 0.0,
+                             vs_paper(r["latency_s"], a["imax_lat"]))
+                    if "imax_edp" in a:
+                        emit(f"edp/anchor/{wl}", 0.0,
+                             vs_paper(r["edp_js"], a["imax_edp"]))
+    # Headline best-case ratios (paper: 44.4x/54x/13.6x PDP; 11.5x/15x EDP).
+    paper_pdp = {"rtx4090": 44.4, "gtx1080ti": 54.0, "jetson_agx_orin": 13.6}
+    paper_edp = {"rtx4090": 11.5, "gtx1080ti": 15.0}
+    for dev_id, ours in best_pdp_ratio.items():
+        emit(f"pdp/best_ratio/{dev_id}", 0.0,
+             vs_paper(ours, paper_pdp.get(dev_id, float("nan"))))
+    for dev_id in paper_edp:
+        emit(f"edp/best_ratio/{dev_id}", 0.0,
+             vs_paper(best_edp_ratio[dev_id], paper_edp[dev_id]))
+
+
+if __name__ == "__main__":
+    main()

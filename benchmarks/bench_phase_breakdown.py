@@ -1,0 +1,50 @@
+"""Fig. 15 + §V.B — execution-phase breakdown (EXEC/LOAD/DRAIN/CONF/REGV/
+RANGE + HOST) for prefill and decode, and the macro anchor:
+
+Paper (Qwen3-0.6B Q3_K_S [32:16], FPGA): total 16.3 s = EXEC 4.47 (27.4%) +
+HOST 5.43 (33.3%) + LOAD 5.31 (32.6%) + DRAIN 0.31 (1.9%) + other 0.78
+(4.8%). Key findings to reproduce: prefill is compute-bound (EXEC > 50%),
+decode is LOAD-bound, REGV is elevated for Q3_K_S prefill (the 64-unit
+Q6_K dataflow).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, vs_paper
+from repro.configs.registry import PAPER_MODELS
+from repro.core.imax_model import asic_28nm, fpga_prototype
+
+PAPER_MACRO = {"EXEC": 4.47, "HOST": 5.43, "LOAD": 5.31, "DRAIN": 0.31,
+               "OTHER": 0.78, "TOTAL": 16.3}
+
+
+def main() -> None:
+    # Macro anchor (FPGA prototype).
+    cfg = PAPER_MODELS["qwen3-0.6b"]
+    r = fpga_prototype().e2e(cfg, "q3_k_s", 32, 16)
+    br = r["breakdown"]
+    tot = {k: br["prefill"][k] + br["decode"][k] for k in br["prefill"]}
+    other = tot["CONF"] + tot["REGV"] + tot["RANGE"]
+    for key, ours in [("EXEC", tot["EXEC"]), ("HOST", tot["HOST"]),
+                      ("LOAD", tot["LOAD"]), ("DRAIN", tot["DRAIN"]),
+                      ("OTHER", other), ("TOTAL", r["latency_s"])]:
+        emit(f"phase_breakdown/anchor/qwen3-0.6b-q3ks-[32:16]/{key}",
+             ours * 1e6, vs_paper(ours, PAPER_MACRO[key]))
+
+    # Per-phase shares across models (28nm): prefill compute-bound,
+    # decode LOAD-bound (the paper's central system finding).
+    asic = asic_28nm()
+    for mname, mcfg in PAPER_MODELS.items():
+        for quant in ["q8_0", "q3_k_s"]:
+            rr = asic.e2e(mcfg, quant, 32, 16)
+            for phase in ("prefill", "decode"):
+                acc = rr["breakdown"][phase]
+                total = sum(acc.values()) or 1.0
+                shares = " ".join(f"{k}={v/total*100:.1f}%"
+                                  for k, v in acc.items() if v / total > 0.005)
+                dom = max(acc, key=acc.get)
+                emit(f"phase_breakdown/{mname}-{quant}/{phase}",
+                     total * 1e6, f"dominant={dom} {shares}")
+
+
+if __name__ == "__main__":
+    main()

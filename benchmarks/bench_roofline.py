@@ -1,0 +1,44 @@
+"""§Roofline — consolidated dry-run table (reads out/dryrun/*.json).
+
+One row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and roofline MFU. This is the source of
+truth for EXPERIMENTS.md §Roofline; it only reports cells already produced
+by ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = pathlib.Path("out/dryrun")
+
+
+def main() -> None:
+    if not DRYRUN_DIR.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        cell = json.loads(f.read_text())
+        name = f"roofline/{cell['arch']}/{cell['shape']}/" + \
+            ("2x16x16" if cell.get("multi_pod") else "16x16") + \
+            (f"/{cell['quant']}" if cell.get("quant", "none") != "none"
+             else "")
+        if "skipped" in cell:
+            emit(name, 0.0, "SKIP " + cell["skipped"][:60])
+            continue
+        if "error" in cell:
+            emit(name, 0.0, "ERROR " + cell["error"][:80])
+            continue
+        emit(name, cell["step_time_s"] * 1e6,
+             f"compute_ms={cell['compute_s']*1e3:.2f} "
+             f"memory_ms={cell['memory_s']*1e3:.2f} "
+             f"collective_ms={cell['collective_s']*1e3:.2f} "
+             f"bottleneck={cell['bottleneck']} "
+             f"useful_flops={cell['useful_flops_fraction']:.3f} "
+             f"mfu={cell['mfu']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

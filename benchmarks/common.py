@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: CSV emission + paper-anchor comparison."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1, **kw):
+    """Median wall time of fn(*args) in microseconds (+ last result)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6, out
+
+
+def vs_paper(ours: float, paper: float) -> str:
+    err = (ours - paper) / paper * 100 if paper else float("nan")
+    return f"ours={ours:.3g} paper={paper:.3g} err={err:+.1f}%"

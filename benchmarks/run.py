@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Emits ``name,us_per_call,derived`` CSV rows.
+
+  bench_kernels          Fig. 5–9   kernel microbenchmarks + footprint
+  bench_quant_accuracy   §III.C     CVT53 / format error claims
+  bench_coalescing       §III.D     LOAD 1.2x / DRAIN 4.8x
+  bench_e2e_latency      Fig. 11    E2E latency by device
+  bench_pdp_edp          Fig. 12/13 PDP/EDP + 44.4x/13.6x/11.5x ratios
+  bench_lmm_size         Fig. 14    LMM sweep (64 KB PDP-optimal)
+  bench_offload_ratio    Table 2    offload ratios (incl. 8B Q8_0 gate)
+  bench_phase_breakdown  Fig. 15    EXEC/LOAD/... phases + macro anchor
+  bench_lane_scaling     Fig. 16    lane saturation at 2
+  bench_roofline         §Roofline  consolidated dry-run table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_coalescing, bench_e2e_latency, bench_kernels,
+                        bench_lane_scaling, bench_lmm_size,
+                        bench_offload_ratio, bench_pdp_edp,
+                        bench_phase_breakdown, bench_quant_accuracy,
+                        bench_roofline)
+
+BENCHES = [
+    ("bench_kernels", bench_kernels),
+    ("bench_quant_accuracy", bench_quant_accuracy),
+    ("bench_coalescing", bench_coalescing),
+    ("bench_e2e_latency", bench_e2e_latency),
+    ("bench_pdp_edp", bench_pdp_edp),
+    ("bench_lmm_size", bench_lmm_size),
+    ("bench_offload_ratio", bench_offload_ratio),
+    ("bench_phase_breakdown", bench_phase_breakdown),
+    ("bench_lane_scaling", bench_lane_scaling),
+    ("bench_roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.main()
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model for a
+few hundred steps with the full production stack (AdamW, cosine schedule,
+microbatching, checkpointing, fault-tolerant outer loop).
+
+  PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+(On this CPU container a ~100M model at short sequence length runs a step
+in a few seconds; pass --tiny for a quicker demonstration.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.api import build_model
+from repro.train.data import SyntheticDataset
+from repro.train.elastic import ElasticRunner
+from repro.train.optimizer import adamw_init
+from repro.train.trainer import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--batch", type=int, default=8)
+args = ap.parse_args()
+
+# ~100M params: 12L x d512 x ffn2048, 32k vocab (tiny: 4L x d128).
+cfg = ModelConfig(
+    name="qwen3-100m", family="dense",
+    num_layers=4 if args.tiny else 12,
+    d_model=128 if args.tiny else 512,
+    num_heads=4 if args.tiny else 8, num_kv_heads=2 if args.tiny else 4,
+    d_ff=256 if args.tiny else 2048,
+    vocab_size=4096 if args.tiny else 32768,
+    head_dim=32 if args.tiny else 64,
+    qk_norm=True, tie_embeddings=True, rope_theta=1e6)
+model = build_model(cfg)
+n = cfg.param_counts()["total"]
+print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+tc = TrainConfig(learning_rate=3e-3, total_steps=args.steps,
+                 warmup_steps=max(args.steps // 20, 1),
+                 microbatches=2, checkpoint_every=100,
+                 checkpoint_dir="/tmp/repro_train_small")
+data = SyntheticDataset(cfg.vocab_size, args.seq, args.batch,
+                        task="copy", pool=16)
+
+
+def init_fn():
+    p = model.init(jax.random.PRNGKey(0))
+    return p, adamw_init(p)
+
+
+def on_step(step, metrics, dt):
+    if step % 10 == 0 or step == 1:
+        print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+              f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms", flush=True)
+
+
+step_fn = jax.jit(make_train_step(model, tc))
+runner = ElasticRunner(tc, step_fn, init_fn, data, on_step=on_step)
+t0 = time.time()
+result = runner.run(args.steps)
+print(f"done: {result['step']} steps in {time.time()-t0:.0f}s "
+      f"final_loss={float(result['metrics']['loss']):.4f} "
+      f"restarts={result['restarts']} stragglers={result['stragglers']}")

@@ -1,0 +1,76 @@
+"""Convert trained dense (bf16/f32) parameters into a quantized recipe.
+
+This is the llama.cpp "model quantization" stage: walk the parameter
+pytree, quantize every linear/embedding weight per the recipe, keep norms
+in high precision (paper §III.B). Works on stacked (scan) weights and MoE
+expert banks by flattening all leading dims into rows (block quantization
+only touches the last axis, so row grouping is layout-invariant).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.core.quant import pack
+from repro.core.quant.formats import RECIPES
+
+_NORM_KEYS = {"mixer_norm", "ffn_norm", "final_norm", "q_norm", "k_norm",
+              "q_a_norm", "kv_a_norm", "norm", "norm1", "norm2",
+              "self_norm", "cross_norm", "enc_norm", "dec_norm"}
+_EMBED_KEYS = {"embed", "lm_head"}
+_RAW_KEYS = {"conv_w", "conv_b", "A_log", "D", "dt_bias", "router"}
+
+
+def _quantize_leaf_dict(node: Dict, fmt: str) -> Dict:
+    """{"w": (..., out, in)} -> plane dict with matching leading dims."""
+    w = node["w"]
+    if fmt in ("none",):
+        out = {"w": w.astype(jnp.bfloat16)}
+    else:
+        lead = w.shape[:-1]
+        flat = pack.quantize(
+            w.reshape(-1, w.shape[-1]).astype(jnp.float32), fmt)
+        out = {k: v.reshape(*lead[:-1], lead[-1], -1)
+               if len(lead) > 1 else v for k, v in flat.items()}
+        if len(lead) == 1:
+            out = {k: v for k, v in out.items()}
+    if "b" in node:
+        out["b"] = node["b"]
+    return out
+
+
+def _is_linear_node(node: Any) -> bool:
+    return (isinstance(node, dict) and "w" in node
+            and not isinstance(node["w"], dict)
+            and getattr(node["w"], "ndim", 0) >= 2)
+
+
+def quantize_params(params: Dict, quant: str) -> Dict:
+    """Dense params pytree -> quantized pytree (recipe ``quant``)."""
+    recipe = RECIPES[quant] if quant != "none" else None
+
+    def walk(node, path):
+        if _is_linear_node(node):
+            key = path[-1] if path else ""
+            outer = path[-2] if len(path) >= 2 else ""
+            if recipe is None:
+                fmt = "none"
+            elif key in _EMBED_KEYS or outer in _EMBED_KEYS:
+                fmt = recipe["embed"]
+            elif key in _RAW_KEYS or outer in _RAW_KEYS:
+                fmt = "none"
+            else:
+                fmt = recipe["linear"]
+            return _quantize_leaf_dict(node, fmt)
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in _NORM_KEYS and isinstance(v, dict):
+                    out[k] = v                      # norms stay high precision
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        return node
+
+    return walk(params, ())

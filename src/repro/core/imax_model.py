@@ -1,0 +1,229 @@
+"""Analytical model of the IMAX CGLA system (paper §II.D–§V).
+
+Reproduces the paper's evaluation pipeline without the FPGA: given a model
+config, a quantization recipe and an [in:out] token workload, it predicts
+the six-phase execution breakdown (EXEC / LOAD / DRAIN / CONF / REGV /
+RANGE + HOST), E2E latency, phase-aware energy, PDP and EDP, for both the
+FPGA prototype (145 MHz) and the 28 nm ASIC projection (840 MHz).
+
+Structure mirrors the hardware:
+  * EXEC: MACs / (lanes x macs-per-cycle(fmt) x freq); per-format
+    throughput reflects the kernel dataflows of Fig. 5–9.
+  * LOAD/DRAIN: the DMA TransferModel from core/coalesce.py (coalesced
+    single-burst by default — §III.D).
+  * CONF/REGV/RANGE: per-call PIO overheads; REGV scales with the number
+    of arithmetic units the kernel maps (Q6_K's 64-unit dataflow causes
+    the large REGV share visible in Fig. 15a).
+  * HOST: non-offloaded compute at dual-A72 throughput + per-call
+    scheduling cost (the 2-lane saturation of Fig. 16).
+
+Calibration constants were fit to the paper's anchor measurements
+(Qwen3-0.6B Q3_K_S [32:16] macro breakdown; PDP/EDP tables) and the fit
+quality is reported by ``benchmarks/bench_phase_breakdown.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.coalesce import TransferModel
+from repro.core.offload import KernelCall, OffloadPolicy, model_kernel_calls
+from repro.core.quant.formats import FORMATS
+
+# Per-format effective MACs/cycle/lane (calibrated; see module docstring).
+MACS_PER_CYCLE = {"fp16": 16.0, "q8_0": 32.0, "q6_k": 16.0, "q3_k": 22.0}
+
+
+@dataclasses.dataclass
+class IMAXSystem:
+    lanes: int = 2
+    pes_per_lane: int = 64
+    freq_hz: float = 840e6              # 28nm ASIC; FPGA prototype: 145e6
+    lmm_kb: int = 64
+    dma: TransferModel = dataclasses.field(
+        default_factory=lambda: TransferModel(bandwidth_Bps=0.85e9,
+                                              setup_s=6.0e-6))
+    coalesced: bool = True              # §III.D optimization (default on)
+    host_gflops: float = 4.0            # dual-core Cortex-A72
+    host_idle_w: float = 1.1
+    host_active_w: float = 3.0
+    # PIO overheads per offloaded kernel call.
+    conf_s: float = 18e-6
+    regv_s_per_unit: float = 1.1e-6
+    range_s: float = 8e-6
+    host_dispatch_s: float = 1.1e-3     # scheduling + data prep per call
+    # (calibrated: A72 Linux driver per-offload cost, anchor (a) HOST share)
+
+    # ------------------------------------------------------------------
+    def design_power_w(self, fmt: str) -> float:
+        """28 nm design-point active power (per-lane synthesis power x
+        active lanes, paper Table 1) — the offload POLICY always evaluates
+        here, because partitioning is a design decision, not a prototype
+        artifact (paper §V.A)."""
+        return FORMATS[fmt].power_w_28nm * self.lanes
+
+    def power_w(self, fmt: str) -> float:
+        """Active accelerator power of THIS system while EXEC'ing."""
+        if self.freq_hz < 400e6:        # FPGA prototype: PL power envelope
+            return 25.0                  # (VPK180)
+        return self.design_power_w(fmt)
+
+    def design_point(self) -> "IMAXSystem":
+        """The 28 nm deployment target this prototype stands in for —
+        offload decisions are made against THESE timings/powers (§V.A),
+        then executed at whatever the concrete system runs."""
+        if self.freq_hz >= 400e6:
+            return self
+        return dataclasses.replace(
+            self, freq_hz=840e6,
+            dma=TransferModel(bandwidth_Bps=3.0e9, setup_s=6e-6))
+
+    # -- per-call phase times -----------------------------------------
+    def exec_time(self, call: KernelCall) -> float:
+        rate = MACS_PER_CYCLE[call.fmt] * self.lanes * self.freq_hz
+        return call.macs / rate
+
+    @property
+    def lmm_capacity_bytes(self) -> float:
+        """Per-invocation staging capacity: half of the total LMM (the
+        other half is the double buffer, §II.D)."""
+        return self.lmm_kb * 1024 * self.pes_per_lane * self.lanes / 2
+
+    def load_time(self, call: KernelCall) -> float:
+        planes = [call.weight_bytes, call.act_bytes,
+                  call.weight_bytes * 0.06, call.weight_bytes * 0.008]
+        total = float(sum(planes))
+        # Each invocation streams in LMM-sized chunks; coalescing merges
+        # the per-plane transactions within each chunk (4 -> 1, §III.D).
+        chunks = max(1, int(-(-total // self.lmm_capacity_bytes)))
+        tx_per_chunk = 1 if self.coalesced else len(planes)
+        # Each extra chunk re-targets the LMM address ranges (~RANGE PIO).
+        rechunk_s = (chunks - 1) * 20e-6
+        return self.dma.time(total, chunks * tx_per_chunk) + rechunk_s
+
+    def drain_time(self, call: KernelCall) -> float:
+        return self.dma.drain_time(call.out_bytes, self.coalesced,
+                                   result_pieces=self.pes_per_lane // 8)
+
+    def conf_times(self, call: KernelCall) -> Dict[str, float]:
+        units = FORMATS[call.fmt].kernel_units
+        return {"CONF": self.conf_s * call.count,
+                "REGV": self.regv_s_per_unit * units * call.count,
+                "RANGE": self.range_s * call.count}
+
+    def kernel_time(self, call: KernelCall) -> float:
+        """Total offloaded cost of a call (used by the offload policy)."""
+        c = self.conf_times(call)
+        return (self.exec_time(call) + self.load_time(call)
+                + self.drain_time(call) + c["CONF"] + c["REGV"] + c["RANGE"])
+
+    def host_time(self, call: KernelCall) -> float:
+        return 2 * call.macs / (self.host_gflops * 1e9)
+
+    def dispatch_time(self, n_calls: int) -> float:
+        """Host-side per-call management cost. The dual-core A72 manages
+        up to 2 lanes at nominal cost; beyond that the control threads
+        contend and per-call cost grows (the Fig. 16 saturation)."""
+        contention = 1.0 + 0.6 * max(0, self.lanes - 2)
+        return self.host_dispatch_s * contention * n_calls
+
+    def static_power_w(self) -> float:
+        """LMM static power scales linearly with LMM size (§V.A); at the
+        64 KB design point it is ~40% of lane power."""
+        return 0.4 * (self.lmm_kb / 64.0 - 1.0) * self.lanes * 2.0
+
+    @property
+    def host_power_w(self) -> float:
+        return self.host_active_w
+
+    # ------------------------------------------------------------------
+    def phase_breakdown(self, cfg: ModelConfig, quant: str,
+                        n_in: int, n_out: int,
+                        policy: Optional[OffloadPolicy] = None) -> Dict:
+        """Fig. 15-style breakdown for a full [n_in:n_out] workload.
+
+        Prefill = one parallel pass over n_in tokens; decode = n_out
+        sequential single-token passes with a growing KV cache.
+        """
+        policy = policy or OffloadPolicy(self.design_point(),
+                                         self.host_gflops)
+        # Per-phase kernel call lists (model_kernel_calls already bakes the
+        # per-pass m: batch*seq for prefill, batch for decode).
+        phase_calls = {}
+        for phase, passes, decode in (("prefill", 1, False),
+                                      ("decode", n_out, True)):
+            calls = model_kernel_calls(cfg, quant, n_in, batch=1,
+                                       decode=decode)
+            phase_calls[phase] = [
+                dataclasses.replace(c, count=c.count * passes)
+                for c in calls]
+        # Static per-kernel-name offload decision across the FULL workload
+        # (llama.cpp selects a backend per op type once per session),
+        # with the format-level DMA-buffer gate applied first.
+        by_name = {}
+        for cs_ in phase_calls.values():
+            for c in cs_:
+                by_name.setdefault(c.name, []).append(c)
+        per_pass = model_kernel_calls(cfg, quant, n_in, batch=1,
+                                      decode=False)
+        decisions = policy.decide_table(per_pass, by_name)
+        out = {}
+        for phase, calls in phase_calls.items():
+            acc = {k: 0.0 for k in
+                   ("EXEC", "LOAD", "DRAIN", "CONF", "REGV", "RANGE",
+                    "HOST")}
+            for scaled in calls:
+                one = dataclasses.replace(scaled, count=1)
+                n_calls = scaled.count
+                if decisions[scaled.name]:
+                    acc["EXEC"] += self.exec_time(scaled)
+                    # One DMA load + drain per kernel invocation.
+                    acc["LOAD"] += self.load_time(one) * n_calls
+                    acc["DRAIN"] += self.drain_time(one) * n_calls
+                    for k, v in self.conf_times(scaled).items():
+                        acc[k] += v
+                    acc["HOST"] += self.dispatch_time(n_calls)
+                else:
+                    acc["HOST"] += self.host_time(scaled) \
+                        + self.dispatch_time(n_calls)
+            out[phase] = acc
+        return out
+
+    def e2e(self, cfg: ModelConfig, quant: str, n_in: int, n_out: int,
+            policy: Optional[OffloadPolicy] = None) -> Dict:
+        """E2E latency + phase-aware energy + PDP/EDP (paper §IV.A)."""
+        br = self.phase_breakdown(cfg, quant, n_in, n_out, policy)
+        total = sum(sum(p.values()) for p in br.values())
+        # Energy: accelerator power only while EXEC'ing the dominant
+        # format; host power throughout.
+        fmt = "q8_0" if quant == "q8_0" else (
+            "q3_k" if quant == "q3_k_s" else "fp16")
+        exec_s = sum(p["EXEC"] for p in br.values())
+        energy = exec_s * (self.power_w(fmt) + self.static_power_w()) \
+            + (total - exec_s) * (self.host_idle_w
+                                  + max(self.static_power_w(), 0.0)) \
+            + sum(p["HOST"] for p in br.values()) * (self.host_active_w
+                                                     - self.host_idle_w)
+        return {
+            "latency_s": total,
+            "energy_j": energy,
+            "pdp_j": energy,                     # phase-aware PDP (= energy)
+            "edp_js": energy * total,
+            "breakdown": br,
+        }
+
+
+def fpga_prototype() -> IMAXSystem:
+    """VPK180 prototype: 145 MHz PL, PS-PL NoC DMA ~0.85 GB/s effective
+    (calibrated to anchor (a)'s LOAD=5.31 s)."""
+    return IMAXSystem(freq_hz=145e6,
+                      dma=TransferModel(bandwidth_Bps=0.85e9, setup_s=6e-6))
+
+
+def asic_28nm(lanes: int = 2, lmm_kb: int = 64) -> IMAXSystem:
+    """28 nm projection: 840 MHz core; system DMA ~3.0 GB/s (calibrated
+    to anchor (e)'s 14.7 s Qwen3-1.7B Q8_0 [32:16] latency and the 5.63 s
+    representative-workload quote)."""
+    return IMAXSystem(freq_hz=840e6, lanes=lanes, lmm_kb=lmm_kb,
+                      dma=TransferModel(bandwidth_Bps=3.0e9, setup_s=6e-6))

@@ -1,0 +1,205 @@
+"""Offload policy + offload-ratio accounting (paper §III.A, Table 2, §V.A).
+
+The paper partitions work between host CPU and IMAX: dot products offload,
+control-heavy ops stay host-side — and, crucially, the offload decision is a
+*policy*, not a constant: Qwen3-8B's Q8_0 kernels are deliberately kept on
+the host because their DMA transfer cost exceeds the compute gain (Table 2
+row "Qwen3-8B Q8_0: 0%", §V.A).
+
+This module reproduces that decision procedure: for every dot-product kernel
+invocation in a model's inference graph, it compares the modeled
+offload cost (DMA load + exec + drain, from the IMAX analytical model)
+against the host-execution cost, and offloads when beneficial — then reports
+Table-2-style offload ratios by kernel format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+from repro.core.quant.formats import FORMATS, RECIPES
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCall:
+    """One dot-product kernel invocation: (M, K) x (N, K)."""
+
+    name: str
+    fmt: str
+    m: int
+    k: int
+    n: int
+    count: int = 1          # invocations per forward pass
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+    @property
+    def weight_bytes(self) -> float:
+        kp = -(-self.k // FORMATS[self.fmt].super_block) * \
+            FORMATS[self.fmt].super_block
+        return self.n * kp * FORMATS[self.fmt].logical_bpw / 8 * self.count
+
+    @property
+    def act_bytes(self) -> float:
+        return self.m * self.k * 4 * self.count
+
+    @property
+    def out_bytes(self) -> float:
+        return self.m * self.n * 4 * self.count
+
+
+def model_kernel_calls(cfg: ModelConfig, quant: str, seq: int,
+                       batch: int = 1, decode: bool = False) -> List[KernelCall]:
+    """Enumerate the offloadable dot-product calls of one forward pass
+    (prefill over ``seq`` tokens, or one decode step against a ``seq`` KV).
+
+    Mirrors Fig. 4: linear projections + GQA attention dot products + SwiGLU
+    matmuls. Host-side ops (norm/rope/softmax/embedding) are not listed —
+    they are never offload candidates.
+    """
+    recipe = RECIPES[quant]
+    lin = recipe["linear"]
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    m = batch * (1 if decode else seq)
+    calls: List[KernelCall] = []
+    L = cfg.num_layers
+    calls.append(KernelCall("attn_q", lin, m, d, nq * hd, L))
+    calls.append(KernelCall("attn_k", lin, m, d, nkv * hd, L))
+    calls.append(KernelCall("attn_v", lin, m, d, nkv * hd, L))
+    calls.append(KernelCall("attn_o", lin, m, nq * hd, d, L))
+    # GQA attention dot products (q.KT and p.V) run in FP16 on IMAX — the
+    # KV cache is not weight-quantized (paper keeps it high precision).
+    kv_len = seq
+    calls.append(KernelCall("attn_qk", "fp16", m * nq, hd, kv_len, L))
+    calls.append(KernelCall("attn_pv", "fp16", m * nq, kv_len, hd, L))
+    calls.append(KernelCall("ffn_gate", lin, m, d, cfg.d_ff, L))
+    calls.append(KernelCall("ffn_up", lin, m, d, cfg.d_ff, L))
+    calls.append(KernelCall("ffn_down", lin, m, cfg.d_ff, d, L))
+    # lm_head (embedding-tied output projection; Q3_K_S keeps it Q6_K).
+    calls.append(KernelCall("lm_head", recipe["embed"], m, d, cfg.vocab_size, 1))
+    return calls
+
+
+@dataclasses.dataclass
+class OffloadDecision:
+    call: KernelCall
+    offloaded: bool
+    reason: str
+
+
+class OffloadPolicy:
+    """PDP-aware offload decision, parameterized by the IMAX cost model.
+
+    Two gates (paper §V.A):
+      1. DMA-buffer gate — the prototype stages offloaded weights in a
+         4 GB DMA buffer (Table 1, note b); a format whose model-level
+         working set exceeds it cannot be streamed efficiently and stays
+         on the host (this is exactly the Qwen3-8B Q8_0 "0%" row).
+      2. Energy gate — offload iff modeled offload energy < host energy.
+         Design power is charged only during EXEC; DMA/conf phases run at
+         host idle power (the accelerator is clock-gated while loading).
+    """
+
+    def __init__(self, imax_model, host_gflops: float = 4.0,
+                 dma_buffer_bytes: float = 4e9):
+        self.imax = imax_model
+        # Dual-core Cortex-A72 sustained GEMM throughput (paper host).
+        self.host_flops = host_gflops * 1e9
+        self.dma_buffer_bytes = dma_buffer_bytes
+
+    def _fits_dma(self, call: KernelCall) -> bool:
+        # Per-INVOCATION gate: one invocation's weights must be stageable
+        # (the format-level gate in ``format_fits`` is the primary check;
+        # a call's .count multiplies cumulative traffic, not working set).
+        one = dataclasses.replace(call, count=1)
+        return one.weight_bytes <= self.dma_buffer_bytes
+
+    def format_fits(self, calls) -> Dict[str, bool]:
+        """Format-level DMA gate: the summed per-pass weight working set of
+        each format must fit the 4 GB DMA staging buffer (Table 1 note b).
+        For Qwen3-8B Q8_0 the set is ~8.7 GB -> the whole format stays on
+        the host, reproducing Table 2's 0% row."""
+        by_fmt: Dict[str, float] = {}
+        for c in calls:
+            per_pass = dataclasses.replace(c, count=max(c.count, 1))
+            by_fmt[c.fmt] = by_fmt.get(c.fmt, 0.0) + per_pass.weight_bytes
+        return {f: b <= self.dma_buffer_bytes for f, b in by_fmt.items()}
+
+    def decide_table(self, per_pass_calls, workload_calls_by_name) -> Dict[str, bool]:
+        """Static offload decision per kernel name for a full workload.
+        ``per_pass_calls``: one forward pass's calls (format gate);
+        ``workload_calls_by_name``: {name: [scaled calls]} (energy gate)."""
+        fits = self.format_fits(per_pass_calls)
+        out = {}
+        for name, cs in workload_calls_by_name.items():
+            if not all(fits.get(c.fmt, True) for c in cs):
+                out[name] = False
+                continue
+            out[name] = self.decide_many(cs)
+        return out
+
+    def _energies(self, call: KernelCall):
+        t_host = 2 * call.macs / self.host_flops
+        e_host = t_host * self.imax.host_power_w
+        # Policy evaluates at the 28nm design point (paper §V.A): the
+        # partitioning is a design decision, independent of whether the
+        # FPGA prototype or the ASIC projection executes it.
+        t_exec = self.imax.exec_time(call)
+        t_rest = self.imax.kernel_time(call) - t_exec
+        e_off = t_exec * self.imax.design_power_w(call.fmt) \
+            + t_rest * self.imax.host_idle_w
+        return e_off, e_host
+
+    def decide(self, call: KernelCall) -> OffloadDecision:
+        if not self._fits_dma(call):
+            return OffloadDecision(
+                call, False, "working set exceeds DMA buffer (4 GB)")
+        e_off, e_host = self._energies(call)
+        if e_off < e_host:
+            return OffloadDecision(call, True, "offload PDP-beneficial")
+        return OffloadDecision(call, False,
+                               "transfer-dominated: host PDP lower")
+
+    def decide_many(self, calls) -> bool:
+        """Single static decision over a kernel's full-workload cost."""
+        if any(not self._fits_dma(c) for c in calls):
+            return False
+        e_off = e_host = 0.0
+        for c in calls:
+            eo, eh = self._energies(c)
+            e_off += eo
+            e_host += eh
+        return e_off < e_host
+
+    def offload_table(self, cfg: ModelConfig, quant: str, seq: int,
+                      batch: int = 1, n_out: int = 16) -> Dict:
+        """Table-2 analog: offload ratio by kernel format + total (by MACs)
+        for a [seq:n_out] workload."""
+        prefill = model_kernel_calls(cfg, quant, seq, batch, decode=False)
+        decode = [dataclasses.replace(c, count=c.count * n_out)
+                  for c in model_kernel_calls(cfg, quant, seq, batch,
+                                              decode=True)]
+        by_name: Dict[str, List[KernelCall]] = {}
+        for c in prefill + decode:
+            by_name.setdefault(c.name, []).append(c)
+        decisions = self.decide_table(prefill, by_name)
+        by_fmt: Dict[str, Dict[str, float]] = {}
+        tot_macs = tot_off = 0.0
+        for call in prefill + decode:
+            f = by_fmt.setdefault(call.fmt, {"macs": 0.0, "off": 0.0})
+            f["macs"] += call.macs
+            tot_macs += call.macs
+            if decisions[call.name]:
+                f["off"] += call.macs
+                tot_off += call.macs
+        out = {
+            fmt: (v["off"] / v["macs"] * 100 if v["macs"] else 0.0)
+            for fmt, v in by_fmt.items()
+        }
+        out["total"] = tot_off / tot_macs * 100 if tot_macs else 0.0
+        return out

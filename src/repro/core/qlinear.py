@@ -1,0 +1,75 @@
+"""QuantizedLinear — the composable offloadable unit (paper Fig. 4, pink).
+
+A linear layer whose weights live in one of the paper's four formats. The
+parameter pytree holds the *packed planes*, so sharded training/serving
+carries the quantized representation end-to-end (this is what makes the
+decode memory-roofline term drop by the format's compression ratio — the
+paper's central efficiency mechanism).
+
+Three execution paths:
+  * impl="ref":    dequant + jnp.dot (CPU tests, dry-run lowering)
+  * impl="pallas": fused dequant-matmul Pallas kernel (TPU target;
+                   interpret=True validates on CPU)
+  * not offloaded: the offload policy can force the "host" path, which in
+    the TPU adaptation means dense bf16 compute from a dequantized copy —
+    used by the offload-ratio accounting, not by production configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import pack
+from repro.core.quant.formats import FORMATS
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinearSpec:
+    """Static description of one quantized linear layer."""
+
+    name: str
+    in_features: int
+    out_features: int
+    fmt: str                   # fp16 | q8_0 | q6_k | q3_k | none(bf16)
+
+    @property
+    def weight_bytes(self) -> float:
+        if self.fmt == "none":
+            return self.in_features * self.out_features * 2
+        return self.out_features * pack.kquant_pad(
+            self.in_features, self.fmt) * FORMATS[self.fmt].physical_bpw / 8
+
+
+def init_qlinear(key, spec: QLinearSpec, scale: float = 0.02):
+    """Initialize (quantized) parameters for the layer."""
+    w = jax.random.normal(key, (spec.out_features, spec.in_features),
+                          jnp.float32) * scale
+    return quantize_weight(w, spec.fmt)
+
+
+def quantize_weight(w: jnp.ndarray, fmt: str):
+    """(out, in) float weight -> plane dict (or bf16 passthrough)."""
+    if fmt == "none":
+        return {"w": w.astype(jnp.bfloat16)}
+    return pack.quantize(w, fmt)
+
+
+def apply_qlinear(params, x: jnp.ndarray, fmt: str, *,
+                  impl: str = "ref", interpret: bool = True,
+                  bias: Optional[jnp.ndarray] = None,
+                  out_dtype=None, **kernel_opts) -> jnp.ndarray:
+    """y = x @ W^T (+ bias). x: (..., in_features)."""
+    out_dtype = out_dtype or x.dtype
+    if fmt == "none":
+        y = jnp.dot(x, params["w"].T.astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    else:
+        y = ops.quantized_matmul(x, params, fmt, impl=impl,
+                                 interpret=interpret, **kernel_opts)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y.astype(out_dtype)

@@ -1,0 +1,169 @@
+"""Quantize + bit-pack weights into TPU struct-of-planes layouts (pure jnp).
+
+Layouts (weights are (N, K): each output row quantized along K, exactly like
+GGML rows; K must be padded to the super-block multiple first):
+
+  fp16:  {"w":  f16 (N, K)}
+  q8_0:  {"qs": i8  (N, K),        "d": f16 (N, K/32)}
+  q6_k:  {"ql": i32 (N, K/8),      # 8 x 4-bit low nibbles / word
+          "qh": i32 (N, K/16),     # 16 x 2-bit highs / word
+          "sc": i8  (N, K/16),     # per-16 sub-scales
+          "d":  f16 (N, K/256)}
+  q3_k:  {"ql": i32 (N, K/16),     # 16 x 2-bit low / word
+          "qh": i32 (N, K/32),     # 32 x 1-bit high / word
+          "sc": i8  (N, K/16),     # 6-bit scales in [0, 63] (int8 lanes)
+          "d":  f16 (N, K/256)}
+
+The packing into int32 words is the TPU analog of the CGLA's packed operand
+streams: one 32-bit lane carries 8/16/32 quants, unpacked by the kernels'
+VPU front-end (shift+mask), mirroring OP_CVT86 / OP_CVT53.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.quant.formats import FORMATS, kquant_pad
+
+Planes = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------
+# Bit packing helpers
+# ----------------------------------------------------------------------
+def pack_bits(vals: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Pack unsigned ``nbits``-wide fields (last axis) into int32 words.
+
+    vals: (..., n) integer array with entries in [0, 2**nbits);
+    returns (..., n * nbits // 32) int32.
+    """
+    per = 32 // nbits
+    assert vals.shape[-1] % per == 0, (vals.shape, nbits)
+    v = vals.astype(jnp.int32).reshape(*vals.shape[:-1], -1, per)
+    shifts = (jnp.arange(per, dtype=jnp.int32) * nbits)
+    words = jnp.sum(jnp.left_shift(v & ((1 << nbits) - 1), shifts), axis=-1)
+    return words.astype(jnp.int32)
+
+
+def unpack_bits(words: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`: (..., W) int32 -> (..., W * 32//nbits)."""
+    per = 32 // nbits
+    shifts = (jnp.arange(per, dtype=jnp.int32) * nbits)
+    fields = jnp.right_shift(words[..., None], shifts) & ((1 << nbits) - 1)
+    return fields.reshape(*words.shape[:-1], -1)
+
+
+def _pad_k(w: jnp.ndarray, mult: int) -> jnp.ndarray:
+    k = w.shape[-1]
+    kp = (k + mult - 1) // mult * mult
+    if kp == k:
+        return w
+    return jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, kp - k)])
+
+
+# ----------------------------------------------------------------------
+# Per-format quantizers
+# ----------------------------------------------------------------------
+def quantize_fp16(w: jnp.ndarray) -> Planes:
+    return {"w": w.astype(jnp.float16)}
+
+
+def quantize_q8_0(w: jnp.ndarray) -> Planes:
+    """Blocks of 32, d = amax/127, q = round(x/d) in [-127, 127]."""
+    w = _pad_k(w.astype(jnp.float32), 32)
+    n, k = w.shape
+    blocks = w.reshape(n, k // 32, 32)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = amax / 127.0
+    d16 = d.astype(jnp.float16)
+    dd = d16.astype(jnp.float32)                 # quantize scale to fp16 first
+    inv = jnp.where(dd > 0, 1.0 / jnp.where(dd > 0, dd, 1.0), 0.0)
+    q = jnp.clip(jnp.round(blocks * inv[..., None]), -127, 127)
+    return {"qs": q.reshape(n, k).astype(jnp.int8), "d": d16}
+
+
+def quantize_q6_k(w: jnp.ndarray) -> Planes:
+    """Super-block 256 / sub-block 16; 6-bit quants with int8 sub-scales."""
+    w = _pad_k(w.astype(jnp.float32), 256)
+    n, k = w.shape
+    sb = w.reshape(n, k // 256, 16, 16)          # (N, S, sub, elem)
+    amax = jnp.max(jnp.abs(sb), axis=-1)          # (N, S, 16)
+    s_i = amax / 32.0                             # per-sub-scale target
+    smax = jnp.max(s_i, axis=-1)                  # (N, S)
+    d = smax / 127.0
+    d16 = d.astype(jnp.float16)
+    dd = d16.astype(jnp.float32)
+    inv_d = jnp.where(dd > 0, 1.0 / jnp.where(dd > 0, dd, 1.0), 0.0)
+    sc = jnp.clip(jnp.round(s_i * inv_d[..., None]), -128, 127)  # (N, S, 16)
+    eff = dd[..., None] * sc                      # effective sub scale
+    inv_eff = jnp.where(eff != 0, 1.0 / jnp.where(eff != 0, eff, 1.0), 0.0)
+    q = jnp.clip(jnp.round(sb * inv_eff[..., None]), -32, 31)
+    qu = (q + 32).astype(jnp.int32).reshape(n, k)  # [0, 63]
+    ql = pack_bits(qu & 0xF, 4)                    # (N, K/8)
+    qh = pack_bits(qu >> 4, 2)                     # (N, K/16)
+    return {
+        "ql": ql,
+        "qh": qh,
+        "sc": sc.reshape(n, k // 16).astype(jnp.int8),
+        "d": d16,
+    }
+
+
+def quantize_q3_k(w: jnp.ndarray) -> Planes:
+    """Super-block 256 / sub-block 16; 3-bit quants (2-bit QL + 1-bit QH),
+    6-bit scales stored as (us - 32) relative to the fp16 super-scale."""
+    w = _pad_k(w.astype(jnp.float32), 256)
+    n, k = w.shape
+    sb = w.reshape(n, k // 256, 16, 16)
+    amax = jnp.max(jnp.abs(sb), axis=-1)          # (N, S, 16)
+    s_i = amax / 4.0                               # q in [-4, 3]
+    smax = jnp.max(s_i, axis=-1)
+    d = smax / 31.0                                # (us - 32) in [0, 31]
+    d16 = d.astype(jnp.float16)
+    dd = d16.astype(jnp.float32)
+    inv_d = jnp.where(dd > 0, 1.0 / jnp.where(dd > 0, dd, 1.0), 0.0)
+    us = jnp.clip(jnp.round(s_i * inv_d[..., None]), 0, 31) + 32  # [32, 63]
+    eff = dd[..., None] * (us - 32.0)
+    inv_eff = jnp.where(eff != 0, 1.0 / jnp.where(eff != 0, eff, 1.0), 0.0)
+    q = jnp.clip(jnp.round(sb * inv_eff[..., None]), -4, 3)       # [-4, 3]
+    qu = (q + 4).astype(jnp.int32).reshape(n, k)   # [0, 7]
+    ql = pack_bits(qu & 0x3, 2)                    # (N, K/16) 2-bit low
+    qh = pack_bits(qu >> 2, 1)                     # (N, K/32) 1-bit high
+    return {
+        "ql": ql,
+        "qh": qh,
+        "sc": us.reshape(n, k // 16).astype(jnp.int8),  # [0, 63]
+        "d": d16,
+    }
+
+
+QUANTIZERS = {
+    "fp16": quantize_fp16,
+    "q8_0": quantize_q8_0,
+    "q6_k": quantize_q6_k,
+    "q3_k": quantize_q3_k,
+}
+
+
+def quantize(w: jnp.ndarray, fmt: str) -> Planes:
+    """Quantize a 2D weight (N, K) into the given format's planes."""
+    assert w.ndim == 2, w.shape
+    return QUANTIZERS[fmt](w)
+
+
+def cvt53_approx_scales(sc: jnp.ndarray) -> jnp.ndarray:
+    """OP_CVT53 (paper §III.C): approximate the 6-bit Q3_K scales to 5 bits
+    by dropping the LSB. Error <= 1 code out of 63 on the scale only."""
+    return (sc.astype(jnp.int32) & ~1).astype(jnp.int8)
+
+
+def planes_nbytes(planes: Planes) -> int:
+    """Physical bytes of a plane dict (TPU layout footprint)."""
+    return int(sum(p.size * p.dtype.itemsize for p in planes.values()))
+
+
+def logical_nbytes(n: int, k: int, fmt: str) -> float:
+    """GGML-faithful logical bytes for an (N, K) weight in ``fmt``."""
+    kp = kquant_pad(k, fmt)
+    return n * kp * FORMATS[fmt].logical_bpw / 8.0

@@ -1,0 +1,68 @@
+"""FP16 dot-product kernel (paper Fig. 6).
+
+Front-end: in-line FP16 -> FP32 upconvert (the paper uses a per-PE LUT to
+bypass dedicated conversion hardware; on TPU the VPU converts natively).
+Back-end: the shared MXU MAC pipeline from ``common.mac_backend``.
+
+y(M, N) = x(M, K) @ W(N, K)^T with W stored fp16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, compute_dtype):
+    common.start_of_k(acc_ref)
+    # Front-end: FP16 -> compute dtype upconvert (LUT analog).
+    w = w_ref[...].astype(jnp.float32)
+    common.mac_backend(x_ref[...], w, acc_ref, compute_dtype)
+    common.end_of_k(o_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "compute_dtype"))
+def matmul_fp16(x: jnp.ndarray, w: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: bool = False,
+                compute_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (M, K) float; w: (N, K) float16. Returns (M, N) float32."""
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = common.pick_block(_ceil_mult(m, 8), block_m)
+    bn = common.pick_block(_ceil_mult(n, 128), block_n)
+    bk = common.pick_block(_ceil_mult(k, 128), block_k)
+    xp = common.pad_to(x, 0, bm)
+    xp = common.pad_to(xp, 1, bk)
+    wp = common.pad_to(w, 0, bn)
+    wp = common.pad_to(wp, 1, bk)
+    mp, kp = xp.shape
+    np_, _ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=common.matmul_compiler_params(),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult

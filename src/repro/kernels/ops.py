@@ -1,0 +1,67 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``quantized_matmul`` is the single entry point the model layer
+(``core.qlinear.QuantizedLinear``) calls. ``impl`` selects:
+  * "ref"     — pure-jnp oracle path (CPU, dry-run lowering, debugging)
+  * "pallas"  — TPU Pallas kernels (``interpret=True`` executes them on CPU
+                for validation; interpret=False is the TPU target)
+
+x may carry arbitrary leading batch dims; they are flattened to M.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quant.pack import Planes
+from repro.kernels import ref as ref_ops
+from repro.kernels.fp16_matmul import matmul_fp16
+from repro.kernels.q8_0_matmul import matmul_q8_0
+from repro.kernels.q6_k_matmul import matmul_q6_k
+from repro.kernels.q3_k_matmul import matmul_q3_k
+
+
+def quantized_matmul(x: jnp.ndarray, planes: Planes, fmt: str, *,
+                     impl: str = "ref", interpret: bool = True,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 512,
+                     approx_cvt53: bool = False,
+                     out_dtype: Optional[jnp.dtype] = None) -> jnp.ndarray:
+    """y[..., N] = x[..., K] @ dequant(planes)[N, K]^T."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    # Zero-pad K up to the format's packed width (quantizers pad rows the
+    # same way, so the dot is exact).
+    if fmt == "fp16":
+        kp = planes["w"].shape[1]
+    elif fmt == "q8_0":
+        kp = planes["qs"].shape[1]
+    else:
+        kp = planes["ql"].shape[1] * (8 if fmt == "q6_k" else 16)
+    if kp != k:
+        x2 = jnp.pad(x2, [(0, 0), (0, kp - k)])
+
+    if impl == "ref":
+        y = ref_ops.matmul_ref(x2, planes, fmt, approx_cvt53=approx_cvt53)
+    elif impl == "pallas":
+        kw = dict(block_m=block_m, block_n=block_n, block_k=block_k,
+                  interpret=interpret)
+        if fmt == "fp16":
+            y = matmul_fp16(x2, planes["w"], **kw)
+        elif fmt == "q8_0":
+            y = matmul_q8_0(x2, planes["qs"], planes["d"], **kw)
+        elif fmt == "q6_k":
+            y = matmul_q6_k(x2, planes["ql"], planes["qh"], planes["sc"],
+                            planes["d"], **kw)
+        elif fmt == "q3_k":
+            y = matmul_q3_k(x2, planes["ql"], planes["qh"], planes["sc"],
+                            planes["d"], approx_cvt53=approx_cvt53, **kw)
+        else:
+            raise ValueError(f"unknown format {fmt!r}")
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    n = y.shape[-1]
+    y = y.reshape(*lead, n)
+    return y.astype(out_dtype) if out_dtype is not None else y

@@ -1,0 +1,82 @@
+"""Q6_K fused dequant-matmul kernel (paper Fig. 8).
+
+Front-end (OP_CVT86 + SML16 analog): decode packed 4-bit lows + 2-bit highs
+into 6-bit quants, apply int8 sub-scales (per 16) and the fp16 super-scale
+(per 256), emitting the common dense tile.
+Back-end: shared MXU MAC.
+
+Planes: {"ql": i32 (N, K/8), "qh": i32 (N, K/16), "sc": i8 (N, K/16),
+         "d": f16 (N, K/256)}; K % 256 == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _kernel(x_ref, ql_ref, qh_ref, sc_ref, d_ref, o_ref, acc_ref, *,
+            compute_dtype):
+    common.start_of_k(acc_ref)
+    # Front-end: CVT86 analog — 4+2 bit fields -> 6-bit quants in [-32, 31].
+    ql = common.unpack_words(ql_ref[...], 4)
+    qh = common.unpack_words(qh_ref[...], 2)
+    q = (ql | (qh << 4)) - 32
+    bn, bk = q.shape
+    sc = sc_ref[...].astype(jnp.float32)                  # (bn, bk/16)
+    d = d_ref[...].astype(jnp.float32)                    # (bn, bk/256)
+    eff = (sc.reshape(bn, bk // 256, 16) * d[..., None]).reshape(bn, bk // 16)
+    w = common.apply_block_scales(q, eff, 16)
+    common.mac_backend(x_ref[...], w, acc_ref, compute_dtype)
+    common.end_of_k(o_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "compute_dtype"))
+def matmul_q6_k(x: jnp.ndarray, ql: jnp.ndarray, qh: jnp.ndarray,
+                sc: jnp.ndarray, d: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: bool = False,
+                compute_dtype=jnp.float32) -> jnp.ndarray:
+    m, k = x.shape
+    n = ql.shape[0]
+    assert k % 256 == 0, f"Q6_K requires K % 256 == 0, got {k}"
+    assert ql.shape == (n, k // 8) and qh.shape == (n, k // 16)
+    assert sc.shape == (n, k // 16) and d.shape == (n, k // 256)
+    bm = common.pick_block((m + 7) // 8 * 8, block_m)
+    bn = common.pick_block((n + 127) // 128 * 128, block_n)
+    bk = common.pick_block(k, max(256, block_k))
+    if bk % 256:
+        raise ValueError(f"block_k must be a multiple of 256, got {bk}")
+    xp = common.pad_to(x, 0, bm)
+    mp = xp.shape[0]
+    qlp = common.pad_to(ql, 0, bn)
+    qhp = common.pad_to(qh, 0, bn)
+    scp = common.pad_to(sc, 0, bn)
+    dp = common.pad_to(d, 0, bn)
+    np_ = qlp.shape[0]
+    grid = (mp // bm, np_ // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 8), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 16), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 16), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 256), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=common.matmul_compiler_params(),
+        interpret=interpret,
+    )(xp, qlp, qhp, scp, dp)
+    return out[:m, :n]

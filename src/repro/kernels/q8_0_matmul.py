@@ -1,0 +1,70 @@
+"""Q8_0 fused dequant-matmul kernel (paper Fig. 5/7).
+
+Front-end: int8 quants scaled by per-32-element fp16 block scales
+(the SML8 two-way SIMD 8-bit multiply's operand prep).
+Back-end: shared MXU MAC (`common.mac_backend`), f32 accumulation standing
+in for the CGLA's sign-extended 24-bit adders (OP_AD24).
+
+Planes: {"qs": int8 (N, K), "d": float16 (N, K/32)}; K % 32 == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _kernel(x_ref, qs_ref, d_ref, o_ref, acc_ref, *, compute_dtype):
+    common.start_of_k(acc_ref)
+    # Front-end: decode int8 + per-32 block scale into the common dense tile.
+    q = qs_ref[...].astype(jnp.int32)
+    d = d_ref[...].astype(jnp.float32)
+    w = common.apply_block_scales(q, d, 32)
+    common.mac_backend(x_ref[...], w, acc_ref, compute_dtype)
+    common.end_of_k(o_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "compute_dtype"))
+def matmul_q8_0(x: jnp.ndarray, qs: jnp.ndarray, d: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: bool = False,
+                compute_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (M, K); qs: (N, K) int8; d: (N, K//32) f16. Returns (M, N) f32."""
+    m, k = x.shape
+    n, k2 = qs.shape
+    assert k == k2 and k % 32 == 0, (x.shape, qs.shape)
+    assert d.shape == (n, k // 32), d.shape
+    bm = common.pick_block((m + 7) // 8 * 8, block_m)
+    bn = common.pick_block((n + 127) // 128 * 128, block_n)
+    bk = common.pick_block(k, max(32, block_k))
+    if bk % 32:
+        raise ValueError(f"block_k must be a multiple of 32, got {bk}")
+    xp = common.pad_to(x, 0, bm)
+    qsp = common.pad_to(qs, 0, bn)
+    dp = common.pad_to(d, 0, bn)
+    mp = xp.shape[0]
+    np_ = qsp.shape[0]
+    grid = (mp // bm, np_ // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 32), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=common.matmul_compiler_params(),
+        interpret=interpret,
+    )(xp, qsp, dp)
+    return out[:m, :n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the ground truth the kernels are tested against (shape/dtype
+sweeps with ``assert_allclose``) and double as the dry-run lowering path
+(pallas TPU kernels do not lower on the CPU host-device backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import dequant
+from repro.core.quant.pack import Planes
+
+
+def matmul_ref(x: jnp.ndarray, planes: Planes, fmt: str,
+               approx_cvt53: bool = False) -> jnp.ndarray:
+    """y = x @ dequantize(planes).T in f32."""
+    if fmt == "q3_k":
+        w = dequant.dequantize_q3_k(planes, approx_cvt53=approx_cvt53)
+    else:
+        w = dequant.DEQUANTIZERS[fmt](planes)
+    return jnp.dot(x.astype(jnp.float32), w.T,
+                   preferred_element_type=jnp.float32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  sm_scale: float | None = None) -> jnp.ndarray:
+    """Naive softmax attention with GQA head grouping; f32 math."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) * sm_scale
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

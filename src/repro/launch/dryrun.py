@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST stay first: jax locks device count on first init.
+# (This also means no `from __future__` here — Python requires those at the
+# top, and the XLA flag requirement wins.)
+
+DOC = """Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — using
+ShapeDtypeStruct stand-ins (no allocation), then extracts the roofline
+terms from ``cost_analysis()`` / ``memory_analysis()`` / the partitioned
+HLO text. Results are cached as JSON under ``--out-dir`` for EXPERIMENTS.md.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init, and only the dry-run wants 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape decode_32k [--multi-pod] [--quant q8_0] [--out-dir out/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import extrapolate, roofline
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.parallel import sharding
+from repro.train.trainer import make_train_step
+from repro.train.optimizer import adamw_init
+
+
+def lower_cell(cfg, shape, mesh, *, quant="none", seq_parallel=True,
+               remat="full", microbatches=1, mixed=False):
+    """Lower + compile one (cfg x shape) cell on ``mesh``. Shared by the
+    full-config proof compile and the cost-extrapolation variants."""
+    from repro.models import flags as mflags
+    import contextlib
+    model = build_model(cfg)
+    ctx = mflags.use_mixed_intermediates(True) if mixed \
+        else contextlib.nullcontext()
+    with ctx, mesh:
+        params_abs = model.abstract_params(quant=quant)
+        p_shard = sharding.param_shardings(params_abs, mesh)
+        specs = model.input_specs(shape)
+
+        if shape.kind == "train":
+            tc = TrainConfig(remat_policy=remat, microbatches=microbatches)
+            act = sharding.activation_sharding(mesh, seq_parallel)
+            step = make_train_step(model, tc, quant=quant, act_sharding=act)
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_shard = jax.tree.map(
+                lambda s: sharding.NamedSharding(mesh, s),
+                sharding.param_specs(opt_abs, mesh))
+            b_shard = sharding.batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, specs["batch"])
+        elif shape.kind == "prefill":
+            act = sharding.activation_sharding(mesh, seq_parallel)
+
+            def prefill(params, batch):
+                return model.prefill(params, batch, quant=quant,
+                                     act_sharding=act)
+            b_shard = sharding.batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(
+                prefill, in_shardings=(p_shard, b_shard),
+            ).lower(params_abs, specs["batch"])
+        else:  # decode
+            def decode(params, token, position, cache):
+                return model.decode_step(params, token, position, cache,
+                                         quant=quant)
+            c_shard = sharding.cache_shardings(specs["cache"], mesh)
+            t_shard = sharding.batch_shardings(specs["token"], mesh)
+            pos_shard = sharding.replicated(mesh)
+            lowered = jax.jit(
+                decode,
+                in_shardings=(p_shard, t_shard, pos_shard, c_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(3,),
+            ).lower(params_abs, specs["token"], specs["position"],
+                    specs["cache"])
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str = "none", seq_parallel: bool = True,
+             remat: str = "full", microbatches: int = 1, mixed: bool = False,
+             verbose: bool = True, extrapolate_costs: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "quant": quant, "seq_parallel": seq_parallel, "remat": remat,
+        "mixed": mixed,
+    }
+    if not shape_applicable(cfg.subquadratic, shape):
+        cell["skipped"] = ("long_500k requires sub-quadratic token mixing; "
+                           f"{arch} is full-attention (see DESIGN.md)")
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    opts = dict(quant=quant, seq_parallel=seq_parallel, remat=remat,
+                microbatches=microbatches, mixed=mixed)
+
+    # 1. Full-config compile: the sharding proof + per-device memory budget.
+    t0 = time.time()
+    compiled = lower_cell(cfg, shape, mesh, **opts)
+    t_compile = time.time() - t0
+    mf = roofline.model_flops_for(cfg, shape)
+    rf = roofline.analyze(compiled, n_dev, model_flops=mf)
+    cell["raw"] = rf.to_dict()
+
+    # 2. Trip-count-corrected costs via per-group differencing.
+    if extrapolate_costs:
+        t1 = time.time()
+        corr = extrapolate.extrapolate(
+            cfg, lambda c: lower_cell(c, shape, mesh, **opts))
+        rf = roofline.Roofline(
+            flops_per_device=corr["flops"],
+            bytes_per_device=corr["bytes"],
+            collective_bytes_per_device=corr["collective_bytes"],
+            collectives=corr["collectives"],
+            n_devices=n_dev,
+            model_flops=mf,
+            argument_bytes=rf.argument_bytes,
+            output_bytes=rf.output_bytes,
+            temp_bytes=rf.temp_bytes,
+        )
+        cell["extrapolate_s"] = round(time.time() - t1, 2)
+    cell.update(rf.to_dict())
+    cell["compile_s"] = round(t_compile, 2)
+    counts = cfg.param_counts()
+    cell["params_total"] = counts["total"]
+    cell["params_active"] = counts["active"]
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={mesh.devices.shape} "
+              f"quant={quant}: compute={rf.compute_s*1e3:.2f}ms "
+              f"memory={rf.memory_s*1e3:.2f}ms "
+              f"collective={rf.collective_s*1e3:.2f}ms "
+              f"bottleneck={rf.bottleneck} mfu={rf.mfu:.3f} "
+              f"(compile {t_compile:.1f}s)")
+        try:
+            print("  memory_analysis:", compiled.memory_analysis())
+        except Exception:
+            pass
+    return cell
+
+
+def cell_filename(arch, shape, multi_pod, quant, **kw) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    extra = "".join(f"_{k}-{v}" for k, v in sorted(kw.items()) if v)
+    return f"{arch}_{shape}_{mesh}_{quant}{extra}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "fp16", "q8_0", "q6_k", "q3_k_s"])
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots_saveable"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mixed", action="store_true",
+                    help="bf16 attention/SSD intermediates (perf lever)")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="raw costs only (multi-pod compile-proof cells)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (assigned arch x shape) on this mesh")
+    ap.add_argument("--out-dir", default="out/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out_dir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    elif args.arch and not args.shape:
+        for shape in SHAPES:
+            cells.append((args.arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        fname = cell_filename(arch, shape, args.multi_pod, args.quant,
+                              tag=args.tag, sp=("0" if args.no_seq_parallel
+                                                else ""),
+                              remat=(args.remat if args.remat != "full"
+                                     else ""),
+                              mixed=("1" if args.mixed else ""),
+                              mb=(args.microbatches
+                                  if args.microbatches > 1 else ""))
+        fpath = outdir / fname
+        if fpath.exists():
+            print(f"[dryrun] cached: {fname}")
+            continue
+        try:
+            cell = run_cell(arch, shape, multi_pod=args.multi_pod,
+                            quant=args.quant,
+                            seq_parallel=not args.no_seq_parallel,
+                            remat=args.remat, mixed=args.mixed,
+                            microbatches=args.microbatches,
+                            extrapolate_costs=not args.no_extrapolate)
+        except Exception as e:
+            traceback.print_exc()
+            cell = {"arch": arch, "shape": shape,
+                    "multi_pod": args.multi_pod, "quant": args.quant,
+                    "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        fpath.write_text(json.dumps(cell, indent=2))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Unified model API: build_model(cfg) -> ModelAPI.
+
+One object per architecture exposing init / loss / forward / prefill /
+decode_step / cache_shapes / input_specs. ``input_specs`` returns
+ShapeDtypeStructs (weak-type-correct, shardable, no allocation) — the
+dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable                    # (key, quant) -> params
+    loss: Callable                    # (params, batch, **opts) -> scalar
+    forward: Callable                 # (params, batch, **opts) -> (logits, aux)
+    prefill: Callable                 # (params, batch, **opts) -> (logits, cache)
+    decode_step: Callable             # (params, token, position, cache, **o)
+    cache_shapes: Callable            # (batch, seq) -> shape pytree
+
+    # ------------------------------------------------------------------
+    def abstract_params(self, quant: str = "none"):
+        """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(
+            functools.partial(self.init, quant=quant), jax.random.PRNGKey(0))
+
+    def cache_specs(self, batch: int, seq: int,
+                    dtype=jnp.bfloat16) -> Dict:
+        shapes = self.cache_shapes(batch, seq)
+
+        def to_spec(x):
+            if isinstance(x, tuple):
+                return jax.ShapeDtypeStruct(x, dtype)
+            return x
+        return jax.tree.map(to_spec, shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def input_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16) -> Dict:
+        """ShapeDtypeStruct stand-ins for the entry point of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            specs.update(self._frontend_specs(b, s, dtype))
+            return {"batch": specs}
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            specs.update(self._frontend_specs(b, s, dtype))
+            return {"batch": specs}
+        # decode: one new token against a KV cache of seq_len.
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "position": jax.ShapeDtypeStruct((), i32),
+            "cache": self.cache_specs(b, s, dtype),
+        }
+
+    def _frontend_specs(self, b: int, s: int, dtype) -> Dict:
+        cfg = self.cfg
+        out = {}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, min(cfg.vision_tokens, s), cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key, quant="none": encdec.encdec_init(key, cfg, quant),
+            loss=lambda params, batch, **kw: encdec.encdec_loss(
+                params, cfg, batch, **_strip(kw)),
+            forward=lambda params, batch, **kw: encdec.encdec_forward(
+                params, cfg, batch, **_strip(kw)),
+            prefill=lambda params, batch, **kw: encdec.encdec_prefill(
+                params, cfg, batch, **_drop_remat(_strip(kw))),
+            decode_step=lambda params, token, position, cache, **kw:
+                encdec.encdec_decode_step(params, cfg, token, position,
+                                          cache, **_drop_chunk(
+                                              _drop_remat(_strip(kw)))),
+            cache_shapes=functools.partial(encdec.encdec_cache_shapes, cfg),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=functools.partial(_lm_init_kw, cfg),
+        loss=functools.partial(_lm_loss_kw, cfg),
+        forward=functools.partial(_lm_forward_kw, cfg),
+        prefill=functools.partial(_lm_prefill_kw, cfg),
+        decode_step=functools.partial(_lm_decode_kw, cfg),
+        cache_shapes=functools.partial(lm.lm_cache_shapes, cfg),
+    )
+
+
+# functools.partial with positional cfg after key needs small adapters.
+def _strip(kw: Dict) -> Dict:
+    # encdec functions don't take act_sharding; drop it (whisper is small).
+    return {k: v for k, v in kw.items()
+            if v is not None and k != "act_sharding"}
+
+
+def _drop_remat(kw: Dict) -> Dict:
+    return {k: v for k, v in kw.items() if k != "remat"}
+
+
+def _drop_chunk(kw: Dict) -> Dict:
+    return {k: v for k, v in kw.items() if k != "kv_chunk"}
+
+
+def _lm_init_kw(cfg, key, quant="none"):
+    return lm.lm_init(key, cfg, quant)
+
+
+def _lm_loss_kw(cfg, params, batch, **kw):
+    return lm.lm_loss(params, cfg, batch, **kw)
+
+
+def _lm_forward_kw(cfg, params, batch, **kw):
+    return lm.lm_forward(params, cfg, batch, **kw)
+
+
+def _lm_prefill_kw(cfg, params, batch, **kw):
+    return lm.lm_prefill(params, cfg, batch, **_drop_remat(kw))
+
+
+def _lm_decode_kw(cfg, params, token, position, cache, **kw):
+    return lm.lm_decode_step(params, cfg, token, position, cache,
+                             **_drop_chunk(_drop_remat(kw)))

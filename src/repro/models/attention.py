@@ -1,0 +1,383 @@
+"""Attention mixers: GQA (w/ qk-norm, bias, M-RoPE) and DeepSeek MLA.
+
+Prefill/train paths use memory-efficient chunked attention (pure-jnp online
+softmax — the XLA-lowered twin of the Pallas flash kernel, required for 32k
+sequences); decode paths attend one query against the KV cache.
+
+Decode steps take a *scalar* position (the serving engine decodes the whole
+batch in lockstep) so cache insertion is a ``dynamic_update_slice`` —
+a single-token write, not a full-cache rewrite.
+
+KV caches:
+  GQA:  {"k": (B, S, Hkv, D), "v": (B, S, Hkv, D)}
+  MLA:  {"ckv": (B, S, kv_lora_rank), "krope": (B, S, rope_dim)}  (compressed;
+        decode uses the absorbed-matmul form so the cache is never expanded)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags, layers
+from repro.models.layers import Params
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Memory-efficient chunked attention (online softmax over KV blocks)
+# ----------------------------------------------------------------------
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, sm_scale: float,
+                      q_offset=0, kv_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D). Returns (B, Sq, H, D).
+
+    ``q_offset``: absolute position of q[0] in the KV timeline (int or
+    traced scalar) — decode passes its current position here.
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]                                     # MLA: dv != d
+    group = h // hkv
+    kv_chunk = min(kv_chunk, skv)
+    nchunk = -(-skv // kv_chunk)
+    kv_pad = nchunk * kv_chunk
+    if kv_pad != skv:
+        k = jnp.pad(k, [(0, 0), (0, kv_pad - skv), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, kv_pad - skv), (0, 0), (0, 0)])
+    mixed = flags.mixed_intermediates()
+    lowp = jnp.bfloat16 if mixed else jnp.float32
+    kc = jnp.moveaxis(k.reshape(b, nchunk, kv_chunk, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nchunk, kv_chunk, hkv, dv), 1, 0)
+    qg = q.astype(lowp).reshape(b, sq, hkv, group, d)
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry                      # (b,hkv,g,sq[,d])
+        idx, kb, vb = inputs
+        kb = kb.astype(lowp)                             # (b, c, hkv, d)
+        vb = vb.astype(lowp)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kb,
+                       preferred_element_type=jnp.float32) * sm_scale
+        ki = idx * kv_chunk + jnp.arange(kv_chunk)       # (c,)
+        qi = q_offset + jnp.arange(sq)                   # (sq,)
+        valid = ki[None, :] < skv
+        if causal:
+            valid = valid & (ki[None, :] <= qi[:, None])
+        else:
+            valid = jnp.broadcast_to(valid, (sq, kv_chunk))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(lowp), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nchunk), kc, vc),
+                                  unroll=flags.inner_unroll())
+    l = jnp.where(l == 0, 1.0, l)
+    out = (acc / l[..., None]).astype(q.dtype)           # (b,hkv,g,sq,dv)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4))            # (b,sq,hkv,g,dv)
+    return out.reshape(b, sq, h, dv)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     sm_scale: float, kv_len=None) -> jnp.ndarray:
+    """Single-token decode: q (B, 1, H, D) vs cache k/v (B, S, Hkv, D).
+    ``kv_len``: scalar/array valid length for masking the padded tail.
+
+    With ``flags.mixed_intermediates()`` the KV cache is contracted in its
+    stored bf16 dtype (f32 accumulation via preferred_element_type) — no
+    f32 copy of the cache is ever materialized, halving decode's dominant
+    HBM traffic."""
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k.shape
+    group = h // hkv
+    if flags.mixed_intermediates():
+        qg = q.astype(k.dtype).reshape(b, hkv, group, d)
+        sc = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32) * sm_scale
+    else:
+        qg = q.astype(jnp.float32).reshape(b, hkv, group, d)
+        sc = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k.astype(jnp.float32)) * sm_scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, None, :] < kv_len
+        sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if flags.mixed_intermediates():
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# GQA attention module (llama/qwen families)
+# ----------------------------------------------------------------------
+def gqa_init(key, cfg: ModelConfig, fmt: str = "none") -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "q": layers.linear_init(kq, d, cfg.num_heads * hd, fmt,
+                                bias=cfg.qkv_bias),
+        "k": layers.linear_init(kk, d, cfg.num_kv_heads * hd, fmt,
+                                bias=cfg.qkv_bias),
+        "v": layers.linear_init(kv, d, cfg.num_kv_heads * hd, fmt,
+                                bias=cfg.qkv_bias),
+        "o": layers.linear_init(ko, cfg.num_heads * hd, d, fmt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd)
+        p["k_norm"] = layers.rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions, fmt: str, impl: str, interpret: bool,
+                 mrope_positions=None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = layers.linear_apply(p["q"], x, fmt, impl=impl, interpret=interpret)
+    k = layers.linear_apply(p["k"], x, fmt, impl=impl, interpret=interpret)
+    v = layers.linear_apply(p["v"], x, fmt, impl=impl, interpret=interpret)
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        if cfg.mrope and mrope_positions is not None:
+            q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta,
+                                   cfg.mrope_sections)
+            k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta,
+                                   cfg.mrope_sections)
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, fmt: str = "none",
+              impl: str = "ref", interpret: bool = True,
+              causal: bool = True, kv_chunk: int = 1024,
+              mrope_positions=None,
+              cross_kv: Optional[Tuple] = None) -> jnp.ndarray:
+    """Full-sequence (train/prefill) GQA. ``cross_kv``: (k, v) overrides for
+    encoder-decoder cross attention (whisper)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q, k, v = _project_qkv(p, cfg, x, positions, fmt, impl, interpret,
+                           mrope_positions)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    o = chunked_attention(q, k, v, causal=causal, sm_scale=hd ** -0.5,
+                          kv_chunk=kv_chunk)
+    o = o.reshape(b, s, cfg.num_heads * hd)
+    return layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
+
+
+def gqa_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, *, fmt: str = "none",
+                impl: str = "ref", interpret: bool = True,
+                kv_chunk: int = 1024, mrope_positions=None):
+    """Prefill returning (out, kv_cache_entry)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q, k, v = _project_qkv(p, cfg, x, positions, fmt, impl, interpret,
+                           mrope_positions)
+    o = chunked_attention(q, k, v, causal=True, sm_scale=hd ** -0.5,
+                          kv_chunk=kv_chunk)
+    o = o.reshape(b, s, cfg.num_heads * hd)
+    out = layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
+    return out, {"k": k, "v": v}
+
+
+def _insert_kv(cache_arr: jnp.ndarray, new: jnp.ndarray,
+               position) -> jnp.ndarray:
+    """Write (B, 1, ...) ``new`` into (B, S, ...) cache at scalar position."""
+    start = (0, position) + (0,) * (cache_arr.ndim - 2)
+    return jax.lax.dynamic_update_slice(
+        cache_arr, new.astype(cache_arr.dtype), start)
+
+
+def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+               position, cache: Dict, *, fmt: str = "none",
+               impl: str = "ref", interpret: bool = True,
+               mrope_positions=None, cross: bool = False):
+    """One-token decode. x: (B, 1, d); ``position``: scalar int32; cache
+    {"k","v"}: (B, S, Hkv, D) pre-allocated. Returns (out, cache).
+
+    ``cross``: whisper cross-attention — attend to a static encoder cache
+    without inserting."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    pos2 = jnp.broadcast_to(position, (b, 1))
+    q, k, v = _project_qkv(p, cfg, x, pos2, fmt, impl, interpret,
+                           mrope_positions)
+    if cross:
+        kc, vc = cache["k"], cache["v"]
+        kv_len = None
+    else:
+        kc = _insert_kv(cache["k"], k, position)
+        vc = _insert_kv(cache["v"], v, position)
+        cache = {"k": kc, "v": vc}
+        kv_len = position + 1
+    o = decode_attention(q, kc, vc, sm_scale=hd ** -0.5, kv_len=kv_len)
+    o = o.reshape(b, 1, cfg.num_heads * hd)
+    out = layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
+    return out, cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    hd = cfg.resolved_head_dim()
+    return {"k": (batch, seq, cfg.num_kv_heads, hd),
+            "v": (batch, seq, cfg.num_kv_heads, hd)}
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank Q/KV, decoupled RoPE, compressed cache
+# ----------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig, fmt: str = "none") -> Params:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 5)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "q_a": layers.linear_init(ks[0], d, m.q_lora_rank, fmt),
+        "q_a_norm": layers.rmsnorm_init(m.q_lora_rank),
+        "q_b": layers.linear_init(ks[1], m.q_lora_rank, h * qk_dim, fmt),
+        "kv_a": layers.linear_init(
+            ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, fmt),
+        "kv_a_norm": layers.rmsnorm_init(m.kv_lora_rank),
+        "kv_b": layers.linear_init(
+            ks[3], m.kv_lora_rank,
+            h * (m.qk_nope_head_dim + m.v_head_dim), fmt),
+        "o": layers.linear_init(ks[4], h * m.v_head_dim, d, fmt),
+    }
+
+
+def _mla_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+             positions: jnp.ndarray, fmt, impl, interpret):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    la = lambda pp, xx: layers.linear_apply(pp, xx, fmt, impl=impl,
+                                            interpret=interpret)
+    qa = layers.rmsnorm_apply(p["q_a_norm"], la(p["q_a"], x), cfg.norm_eps)
+    q = la(p["q_b"], qa).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = la(p["kv_a"], x)
+    ckv, krope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = layers.rmsnorm_apply(p["kv_a_norm"], ckv, cfg.norm_eps)
+    krope = layers.apply_rope(krope[:, :, None, :], positions,
+                              cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, fmt: str = "none",
+              impl: str = "ref", interpret: bool = True,
+              kv_chunk: int = 1024) -> jnp.ndarray:
+    """Train/prefill MLA: expand compressed KV per chunk, chunked attention."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    q_nope, q_rope, ckv, krope = _mla_qkv(p, cfg, x, positions, fmt, impl,
+                                          interpret)
+    kvb = layers.linear_apply(p["kv_b"], ckv, fmt, impl=impl,
+                              interpret=interpret)
+    kvb = kvb.reshape(b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = chunked_attention(q, k, v, causal=True, sm_scale=sm,
+                          kv_chunk=kv_chunk)
+    o = o.reshape(b, s, h * m.v_head_dim)
+    return layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
+
+
+def mla_prefill(p, cfg, x, positions, *, fmt="none", impl="ref",
+                interpret=True, kv_chunk: int = 1024):
+    out = mla_apply(p, cfg, x, positions, fmt=fmt, impl=impl,
+                    interpret=interpret, kv_chunk=kv_chunk)
+    # Cache holds the *compressed* latents only (the MLA memory win).
+    _, _, ckv, krope = _mla_qkv(p, cfg, x, positions, fmt, impl, interpret)
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
+               interpret=True):
+    """Absorbed-matmul MLA decode: the kv_b projection is folded into the
+    query/output sides so the compressed cache is attended directly —
+    no (B, S, H, D) expansion ever materializes."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    pos2 = jnp.broadcast_to(position, (b, 1))
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
+        p, cfg, x, pos2, fmt, impl, interpret)
+    ckv = _insert_kv(cache["ckv"], ckv_new, position)
+    krope = _insert_kv(cache["krope"], krope_new, position)
+    cache = {"ckv": ckv, "krope": krope}
+
+    wkv = layers.linear_dense_weight(p["kv_b"], fmt, dtype=jnp.float32)
+    wkv = wkv[:, :m.kv_lora_rank]      # drop K-quant padding columns
+    wkv = wkv.reshape(h, m.qk_nope_head_dim + m.v_head_dim, m.kv_lora_rank)
+    wk = wkv[:, :m.qk_nope_head_dim]                    # (h, nope, rank)
+    wv = wkv[:, m.qk_nope_head_dim:]                    # (h, v, rank)
+
+    qn = q_nope[:, 0].astype(jnp.float32)               # (b, h, nope)
+    q_eff = jnp.einsum("bhc,hcr->bhr", qn, wk)          # (b, h, rank)
+    if flags.mixed_intermediates():
+        s_nope = jnp.einsum("bhr,bsr->bhs", q_eff.astype(ckv.dtype), ckv,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhe,bse->bhs",
+                            q_rope[:, 0].astype(krope.dtype), krope,
+                            preferred_element_type=jnp.float32)
+        ckv_f = ckv
+    else:
+        ckv_f = ckv.astype(jnp.float32)
+        s_nope = jnp.einsum("bhr,bsr->bhs", q_eff, ckv_f)
+        s_rope = jnp.einsum("bhe,bse->bhs",
+                            q_rope[:, 0].astype(jnp.float32),
+                            krope.astype(jnp.float32))
+    sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    sc = (s_nope + s_rope) * sm
+    slen = ckv.shape[1]
+    sc = jnp.where(jnp.arange(slen)[None, None, :] < position + 1,
+                   sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)                    # (b, h, s)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_f.dtype), ckv_f,
+                     preferred_element_type=jnp.float32)  # (b, h, rank)
+    o = jnp.einsum("bhr,hvr->bhv", ctx, wv)             # (b, h, v_dim)
+    o = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    out = layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
+    return out, cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    m = cfg.mla
+    return {"ckv": (batch, seq, m.kv_lora_rank),
+            "krope": (batch, seq, m.qk_rope_head_dim)}

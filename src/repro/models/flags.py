@@ -1,0 +1,49 @@
+"""Module-level model-lowering flags.
+
+``unroll_inner``: when True, inner scans (chunked-attention KV loop, SSD
+inter-chunk recurrence) are fully unrolled at trace time. The dry-run cost
+extrapolation needs this because XLA's HloCostAnalysis counts a while-loop
+body ONCE regardless of trip count — unrolling the (bounded, small) inner
+loops makes ``cost_analysis()`` exact for them, while the (large) layer
+loop is corrected by per-group L/L+1 differencing in
+``analysis/extrapolate.py``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL_INNER = contextvars.ContextVar("unroll_inner", default=False)
+
+
+def inner_unroll():
+    """Value to pass as ``lax.scan(..., unroll=)``."""
+    return True if _UNROLL_INNER.get() else 1
+
+
+@contextlib.contextmanager
+def unroll_inner_scans(enabled: bool = True):
+    tok = _UNROLL_INNER.set(enabled)
+    try:
+        yield
+    finally:
+        _UNROLL_INNER.reset(tok)
+
+
+_MIXED = contextvars.ContextVar("mixed_intermediates", default=False)
+
+
+def mixed_intermediates() -> bool:
+    """When True, attention/SSD inner tensors are bf16 (f32 accumulation)
+    — halves the memory-roofline term of the score/probability traffic.
+    Default False (f32) so oracle-equivalence tests stay tight."""
+    return _MIXED.get()
+
+
+@contextlib.contextmanager
+def use_mixed_intermediates(enabled: bool = True):
+    tok = _MIXED.set(enabled)
+    try:
+        yield
+    finally:
+        _MIXED.reset(tok)

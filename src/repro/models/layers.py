@@ -1,0 +1,207 @@
+"""Shared model layers (pure functional JAX).
+
+Per the paper's task partitioning (Fig. 4), RMSNorm / RoPE / embedding /
+softmax are "host-side" ops — they stay plain JAX and are never quantized
+(norm weights remain high-precision, §III.B). Linear projections route
+through ``linear_*`` below, which speak the quantized plane formats.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import pack
+from repro.core.quant.formats import RECIPES
+from repro.kernels import ops as kops
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------
+# Linear (quantization-aware)
+# ----------------------------------------------------------------------
+def linear_init(key, d_in: int, d_out: int, fmt: str = "none",
+                bias: bool = False, scale: Optional[float] = None,
+                dtype=jnp.bfloat16) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_out, d_in), jnp.float32) * scale
+    p = quantize_linear_weight(w, fmt, dtype)
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def quantize_linear_weight(w: jnp.ndarray, fmt: str,
+                           dtype=jnp.bfloat16) -> Params:
+    if fmt == "none":
+        return {"w": w.astype(dtype)}
+    return dict(pack.quantize(w, fmt))
+
+
+def linear_apply(p: Params, x: jnp.ndarray, fmt: str = "none", *,
+                 impl: str = "ref", interpret: bool = True) -> jnp.ndarray:
+    if fmt == "none":
+        y = jnp.einsum("...k,nk->...n", x, p["w"].astype(x.dtype))
+    else:
+        y = kops.quantized_matmul(x, {k: v for k, v in p.items() if k != "b"},
+                                  fmt, impl=impl, interpret=interpret,
+                                  out_dtype=x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def linear_out_features(p: Params, fmt: str) -> int:
+    if fmt == "none" or fmt == "fp16":
+        return p["w"].shape[0]
+    return p["qs"].shape[0] if fmt == "q8_0" else p["ql"].shape[0]
+
+
+def linear_dense_weight(p: Params, fmt: str, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Materialize the (out, in) dense weight (dequantizing if needed).
+
+    Used by the MLA absorbed-decode path, which needs the kv_b weight in
+    per-head block form."""
+    if fmt == "none":
+        return p["w"].astype(dtype)
+    from repro.core.quant import dequant  # local import to avoid cycle
+    return dequant.DEQUANTIZERS[fmt](
+        {k: v for k, v in p.items() if k != "b"}).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms ("host-side": always high precision)
+# ----------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["g"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray,
+                    eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Embedding (quantizable table; lookup is host-side gather + dequant)
+# ----------------------------------------------------------------------
+def embedding_init(key, vocab: int, d: int, fmt: str = "none",
+                   dtype=jnp.bfloat16) -> Params:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    if fmt == "none":
+        return {"w": w.astype(dtype)}
+    return dict(pack.quantize(w, fmt))
+
+
+def embedding_lookup(p: Params, tokens: jnp.ndarray, fmt: str = "none",
+                     dtype=jnp.bfloat16, width: int = 0) -> jnp.ndarray:
+    """Gather rows, dequantizing just the gathered rows for quant formats.
+    ``width``: original embedding width (dequant may return K-quant padded
+    rows; sliced back here)."""
+    if fmt == "none" or fmt == "fp16":
+        key = "w"
+        return p[key].astype(dtype)[tokens]
+    # Gather each plane's rows then dequantize the small gathered table.
+    gathered = {k: v[tokens.reshape(-1)] for k, v in p.items()}
+    from repro.core.quant import dequant  # local import to avoid cycle
+    flat = dequant.DEQUANTIZERS[fmt](gathered)
+    if width:
+        flat = flat[..., :width]
+    d = flat.shape[-1]
+    return flat.reshape(*tokens.shape, d).astype(dtype)
+
+
+def embedding_logits(p: Params, x: jnp.ndarray, fmt: str = "none",
+                     impl: str = "ref", interpret: bool = True) -> jnp.ndarray:
+    """Tied lm_head: logits = x @ E^T (offloadable dot product)."""
+    if fmt == "none" or fmt == "fp16":
+        w = p["w"]
+        return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
+    return kops.quantized_matmul(x, p, fmt, impl=impl, interpret=interpret,
+                                 out_dtype=x.dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE (host-side)
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions_3d: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: positions_3d (B, S, 3) = (temporal, height, width);
+    the D/2 rotary channels are split into ``sections`` (summing to D/2),
+    each rotated by its own position stream."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)),
+        jnp.array(sections),
+        total_repeat_length=d // 2)                      # (D/2,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions_3d.shape[:2] + (d // 2,)),
+        axis=-1)                                         # (B, S, D/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP (gate/up/down are offloadable dot products)
+# ----------------------------------------------------------------------
+def swiglu_init(key, d: int, d_ff: int, fmt: str = "none") -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(kg, d, d_ff, fmt),
+        "up": linear_init(ku, d, d_ff, fmt),
+        "down": linear_init(kd, d_ff, d, fmt),
+    }
+
+
+def swiglu_apply(p: Params, x: jnp.ndarray, fmt: str = "none", *,
+                 impl: str = "ref", interpret: bool = True) -> jnp.ndarray:
+    g = linear_apply(p["gate"], x, fmt, impl=impl, interpret=interpret)
+    u = linear_apply(p["up"], x, fmt, impl=impl, interpret=interpret)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return linear_apply(p["down"], h, fmt, impl=impl, interpret=interpret)
+
+
+def recipe_for(quant: str) -> Dict[str, str]:
+    return RECIPES.get(quant, RECIPES["fp16"]) if quant != "none" else {
+        "linear": "none", "embed": "none", "norm": "fp16"}

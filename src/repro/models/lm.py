@@ -1,0 +1,426 @@
+"""Decoder-only LM assembly for dense / moe / vlm / ssm / hybrid families.
+
+Layers are stacked (leading L dim) and driven by ``lax.scan`` so the HLO
+stays compact for 126-layer models; non-uniform stacks (deepseek's dense
+prefix, jamba's period-8 pattern) scan over their own groups.
+
+Each family provides: init / forward (train+loss) / prefill / decode_step /
+cache shapes. Quantization (`quant` recipe name) is a *static* argument that
+determines the parameter pytree structure (plane dicts) — the same functions
+serve both bf16 training and quantized inference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import flags
+from repro.models import layers, moe, ssm
+from repro.models.layers import Params
+
+
+# ----------------------------------------------------------------------
+# Generic layer = pre-norm mixer + pre-norm FFN
+# ----------------------------------------------------------------------
+def _mixer_kind(cfg: ModelConfig, li: int) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "gqa" if (li % cfg.attn_period) == cfg.attn_offset else "ssm"
+    if cfg.mla is not None:
+        return "mla"
+    return "gqa"
+
+
+def _ffn_kind(cfg: ModelConfig, li: int) -> str:
+    if cfg.family == "ssm":
+        return "none"
+    if cfg.family == "hybrid":
+        return "moe" if (cfg.moe_period and li % cfg.moe_period == 1) \
+            else "dense"
+    if cfg.moe is not None:
+        return "moe" if li >= cfg.moe.first_dense_layers else "dense"
+    return "dense"
+
+
+def layer_init(key, cfg: ModelConfig, mixer: str, ffn: str,
+               fmt: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"mixer_norm": layers.rmsnorm_init(cfg.d_model)}
+    if mixer == "gqa":
+        p["attn"] = attn.gqa_init(k1, cfg, fmt)
+    elif mixer == "mla":
+        p["attn"] = attn.mla_init(k1, cfg, fmt)
+    else:
+        p["ssm"] = ssm.ssm_init(k1, cfg, fmt)
+    if ffn != "none":
+        p["ffn_norm"] = layers.rmsnorm_init(cfg.d_model)
+        if ffn == "moe":
+            p["ffn"] = moe.moe_init(k2, cfg, fmt)
+        else:
+            dff = cfg.d_ff
+            if cfg.moe is not None and cfg.moe.dense_d_ff and ffn == "dense":
+                dff = cfg.moe.dense_d_ff
+            p["ffn"] = layers.swiglu_init(k2, cfg.d_model, dff, fmt)
+    return p
+
+
+def layer_apply(p: Params, cfg: ModelConfig, h, positions, *, mixer, ffn,
+                fmt, impl, interpret, kv_chunk, mrope_positions=None):
+    """Full-sequence layer (train). Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
+    if mixer == "gqa":
+        mix = attn.gqa_apply(p["attn"], cfg, hn, positions, fmt=fmt,
+                             impl=impl, interpret=interpret,
+                             kv_chunk=kv_chunk,
+                             mrope_positions=mrope_positions)
+    elif mixer == "mla":
+        mix = attn.mla_apply(p["attn"], cfg, hn, positions, fmt=fmt,
+                             impl=impl, interpret=interpret,
+                             kv_chunk=kv_chunk)
+    else:
+        mix = ssm.ssm_apply(p["ssm"], cfg, hn, fmt=fmt, impl=impl,
+                            interpret=interpret)
+    h = h + mix
+    if ffn != "none":
+        hn = layers.rmsnorm_apply(p["ffn_norm"], h, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe.moe_apply(p["ffn"], cfg, hn, fmt=fmt, impl=impl,
+                                   interpret=interpret)
+        else:
+            y = layers.swiglu_apply(p["ffn"], hn, fmt, impl=impl,
+                                    interpret=interpret)
+        h = h + y
+    return h, aux
+
+
+def layer_prefill(p: Params, cfg: ModelConfig, h, positions, *, mixer, ffn,
+                  fmt, impl, interpret, kv_chunk, mrope_positions=None):
+    """Returns (h, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
+    if mixer == "gqa":
+        mix, cache = attn.gqa_prefill(p["attn"], cfg, hn, positions, fmt=fmt,
+                                      impl=impl, interpret=interpret,
+                                      kv_chunk=kv_chunk,
+                                      mrope_positions=mrope_positions)
+    elif mixer == "mla":
+        mix, cache = attn.mla_prefill(p["attn"], cfg, hn, positions, fmt=fmt,
+                                      impl=impl, interpret=interpret,
+                                      kv_chunk=kv_chunk)
+    else:
+        mix, cache = ssm.ssm_apply(p["ssm"], cfg, hn, fmt=fmt, impl=impl,
+                                   interpret=interpret, return_state=True)
+    h = h + mix
+    if ffn != "none":
+        hn = layers.rmsnorm_apply(p["ffn_norm"], h, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe.moe_apply(p["ffn"], cfg, hn, fmt=fmt, impl=impl,
+                                   interpret=interpret)
+        else:
+            y = layers.swiglu_apply(p["ffn"], hn, fmt, impl=impl,
+                                    interpret=interpret)
+        h = h + y
+    return h, cache, aux
+
+
+def layer_decode(p: Params, cfg: ModelConfig, h, position, cache, *,
+                 mixer, ffn, fmt, impl, interpret, mrope_positions=None):
+    """One-token layer step. Returns (h, new_cache)."""
+    hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
+    if mixer == "gqa":
+        mix, cache = attn.gqa_decode(p["attn"], cfg, hn, position, cache,
+                                     fmt=fmt, impl=impl, interpret=interpret,
+                                     mrope_positions=mrope_positions)
+    elif mixer == "mla":
+        mix, cache = attn.mla_decode(p["attn"], cfg, hn, position, cache,
+                                     fmt=fmt, impl=impl, interpret=interpret)
+    else:
+        mix, cache = ssm.ssm_decode(p["ssm"], cfg, hn, cache, fmt=fmt,
+                                    impl=impl, interpret=interpret)
+    h = h + mix
+    if ffn != "none":
+        hn = layers.rmsnorm_apply(p["ffn_norm"], h, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = moe.moe_apply(p["ffn"], cfg, hn, fmt=fmt, impl=impl,
+                                 interpret=interpret)
+        else:
+            y = layers.swiglu_apply(p["ffn"], hn, fmt, impl=impl,
+                                    interpret=interpret)
+        h = h + y
+    return h, cache
+
+
+def layer_cache_shape(cfg: ModelConfig, mixer: str, batch: int, seq: int):
+    if mixer == "gqa":
+        return attn.gqa_cache_shape(cfg, batch, seq)
+    if mixer == "mla":
+        return attn.mla_cache_shape(cfg, batch, seq)
+    return ssm.ssm_cache_shape(cfg, batch)
+
+
+# ----------------------------------------------------------------------
+# Layer grouping: contiguous runs of identical (mixer, ffn) signatures
+# become one stacked scan group; jamba's period-8 pattern becomes a scan
+# over blocks of 8 distinct sub-layers.
+# ----------------------------------------------------------------------
+def layer_groups(cfg: ModelConfig):
+    """Returns list of (group_name, count, [(mixer, ffn), ...per sub-layer])."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        assert cfg.num_layers % period == 0
+        subs = [( _mixer_kind(cfg, i), _ffn_kind(cfg, i))
+                for i in range(period)]
+        return [("blocks", cfg.num_layers // period, subs)]
+    sigs = [(_mixer_kind(cfg, i), _ffn_kind(cfg, i))
+            for i in range(cfg.num_layers)]
+    groups = []
+    start = 0
+    for i in range(1, cfg.num_layers + 1):
+        if i == cfg.num_layers or sigs[i] != sigs[start]:
+            groups.append((f"layers{len(groups)}", i - start, [sigs[start]]))
+            start = i
+    return groups
+
+
+def _stack_init(key, count: int, one_init):
+    keys = jax.random.split(key, count)
+    return jax.vmap(one_init)(keys)
+
+
+# ----------------------------------------------------------------------
+# Model: init / forward / prefill / decode
+# ----------------------------------------------------------------------
+def lm_init(key, cfg: ModelConfig, quant: str = "none") -> Params:
+    recipe = layers.recipe_for(quant)
+    fmt_lin, fmt_emb = recipe["linear"], recipe["embed"]
+    kemb, klay, khead = jax.random.split(key, 3)
+    params: Params = {
+        "embed": layers.embedding_init(kemb, cfg.vocab_size, cfg.d_model,
+                                       fmt_emb),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+    groups = layer_groups(cfg)
+    gkeys = jax.random.split(klay, len(groups))
+    for gk, (name, count, subs) in zip(gkeys, groups):
+        def one(k, subs=subs):
+            sks = jax.random.split(k, len(subs))
+            if len(subs) == 1:
+                return layer_init(sks[0], cfg, subs[0][0], subs[0][1],
+                                  fmt_lin)
+            return {f"sub{i}": layer_init(sk, cfg, mx, ff, fmt_lin)
+                    for i, (sk, (mx, ff)) in enumerate(zip(sks, subs))}
+        params[name] = _stack_init(gk, count, one)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.linear_init(
+            khead, cfg.d_model, cfg.vocab_size, fmt_emb)
+    return params
+
+
+def _mrope_positions(cfg: ModelConfig, batch: int, seq: int):
+    """Deterministic stub M-RoPE position grid: vision tokens get a
+    (t=0, h, w) raster; text tokens advance temporally after the image."""
+    v = min(cfg.vision_tokens, seq)
+    side = max(int(v ** 0.5), 1)
+    idx = jnp.arange(seq)
+    is_vis = idx < v
+    t_pos = jnp.where(is_vis, 0, idx - v + side)
+    h_pos = jnp.where(is_vis, idx // side, idx - v + side)
+    w_pos = jnp.where(is_vis, idx % side, idx - v + side)
+    pos3 = jnp.stack([t_pos, h_pos, w_pos], axis=-1)       # (S, 3)
+    return jnp.broadcast_to(pos3[None], (batch, seq, 3))
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict, quant: str,
+                  dtype=jnp.bfloat16):
+    recipe = layers.recipe_for(quant)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = layers.embedding_lookup(params["embed"], tokens, recipe["embed"],
+                                dtype, width=cfg.d_model)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].shape[1]
+        h = jnp.concatenate([batch["vision_embeds"].astype(dtype),
+                             h[:, v:]], axis=1)
+    return h
+
+
+def _lm_head(params, cfg: ModelConfig, h, quant: str, impl, interpret):
+    recipe = layers.recipe_for(quant)
+    if cfg.tie_embeddings:
+        return layers.embedding_logits(params["embed"], h, recipe["embed"],
+                                       impl=impl, interpret=interpret)
+    return layers.linear_apply(params["lm_head"], h, recipe["embed"],
+                               impl=impl, interpret=interpret)
+
+
+def lm_forward(params: Params, cfg: ModelConfig, batch: Dict, *,
+               quant: str = "none", impl: str = "ref",
+               interpret: bool = True, kv_chunk: int = 1024,
+               remat: str = "none",
+               act_sharding=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    recipe = layers.recipe_for(quant)
+    fmt = recipe["linear"]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_inputs(params, cfg, batch, quant)
+    if act_sharding is not None:
+        h = jax.lax.with_sharding_constraint(h, act_sharding)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mrope_pos = _mrope_positions(cfg, b, s) if cfg.mrope else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for name, count, subs in layer_groups(cfg):
+        def body(h, lp, subs=subs):
+            aux_g = jnp.zeros((), jnp.float32)
+            if len(subs) == 1:
+                h, aux = layer_apply(lp, cfg, h, positions, mixer=subs[0][0],
+                                     ffn=subs[0][1], fmt=fmt, impl=impl,
+                                     interpret=interpret, kv_chunk=kv_chunk,
+                                     mrope_positions=mrope_pos)
+                aux_g += aux
+            else:
+                for i, (mx, ff) in enumerate(subs):
+                    h, aux = layer_apply(lp[f"sub{i}"], cfg, h, positions,
+                                         mixer=mx, ffn=ff, fmt=fmt,
+                                         impl=impl, interpret=interpret,
+                                         kv_chunk=kv_chunk,
+                                         mrope_positions=mrope_pos)
+                    aux_g += aux
+            if act_sharding is not None:
+                h = jax.lax.with_sharding_constraint(h, act_sharding)
+            return h, aux_g
+        if remat != "none":
+            body = jax.checkpoint(
+                body,
+                policy=(jax.checkpoint_policies.dots_saveable
+                        if remat == "dots_saveable" else None))
+        h, auxs = jax.lax.scan(body, h, params[name],
+                                unroll=flags.inner_unroll())
+        aux_total += jnp.sum(auxs)
+
+    h = layers.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = _lm_head(params, cfg, h, quant, impl, interpret)
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict, *, quant="none",
+            impl="ref", interpret=True, kv_chunk=1024,
+            remat="none", act_sharding=None) -> jnp.ndarray:
+    logits, aux = lm_forward(params, cfg, batch, quant=quant, impl=impl,
+                             interpret=interpret, kv_chunk=kv_chunk,
+                             remat=remat, act_sharding=act_sharding)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return ce + coef * aux
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
+               impl="ref", interpret=True, kv_chunk=1024,
+               act_sharding=None):
+    """Prefill: returns (last-token logits, cache pytree)."""
+    recipe = layers.recipe_for(quant)
+    fmt = recipe["linear"]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_inputs(params, cfg, batch, quant)
+    if act_sharding is not None:
+        h = jax.lax.with_sharding_constraint(h, act_sharding)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mrope_pos = _mrope_positions(cfg, b, s) if cfg.mrope else None
+    caches = {}
+    for name, count, subs in layer_groups(cfg):
+        def body(h, lp, subs=subs):
+            if len(subs) == 1:
+                h, cache, _ = layer_prefill(
+                    lp, cfg, h, positions, mixer=subs[0][0], ffn=subs[0][1],
+                    fmt=fmt, impl=impl, interpret=interpret,
+                    kv_chunk=kv_chunk, mrope_positions=mrope_pos)
+            else:
+                cache = {}
+                for i, (mx, ff) in enumerate(subs):
+                    h, c, _ = layer_prefill(
+                        lp[f"sub{i}"], cfg, h, positions, mixer=mx, ffn=ff,
+                        fmt=fmt, impl=impl, interpret=interpret,
+                        kv_chunk=kv_chunk, mrope_positions=mrope_pos)
+                    cache[f"sub{i}"] = c
+            return h, cache
+        h, cache = jax.lax.scan(body, h, params[name],
+                                 unroll=flags.inner_unroll())
+        caches[name] = cache
+    h = layers.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = _lm_head(params, cfg, h[:, -1:], quant, impl, interpret)
+    return logits, caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
+                   position, cache, *, quant="none", impl="ref",
+                   interpret=True):
+    """token: (B, 1) int32; position: scalar int32; cache from prefill or
+    ``lm_cache_shapes``. Returns (logits (B, 1, V), new_cache)."""
+    recipe = layers.recipe_for(quant)
+    fmt = recipe["linear"]
+    b = token.shape[0]
+    h = layers.embedding_lookup(params["embed"], token, recipe["embed"],
+                                jnp.bfloat16, width=cfg.d_model)
+    mrope_pos = None
+    if cfg.mrope:
+        # Decode tokens are text: all three M-RoPE streams advance together,
+        # offset by the vision raster (matches _mrope_positions for idx >= V).
+        v = cfg.vision_tokens
+        side = max(int(v ** 0.5), 1)
+        eff = position - v + side
+        mrope_pos = jnp.broadcast_to(eff, (b, 1, 3))
+    new_caches = {}
+    for name, count, subs in layer_groups(cfg):
+        def body(h, xs, subs=subs):
+            lp, lc = xs
+            if len(subs) == 1:
+                h, c = layer_decode(lp, cfg, h, position, lc,
+                                    mixer=subs[0][0], ffn=subs[0][1],
+                                    fmt=fmt, impl=impl, interpret=interpret,
+                                    mrope_positions=mrope_pos)
+            else:
+                c = {}
+                for i, (mx, ff) in enumerate(subs):
+                    h, ci = layer_decode(lp[f"sub{i}"], cfg, h, position,
+                                         lc[f"sub{i}"], mixer=mx, ffn=ff,
+                                         fmt=fmt, impl=impl,
+                                         interpret=interpret,
+                                         mrope_positions=mrope_pos)
+                    c[f"sub{i}"] = ci
+            return h, c
+        h, new_cache = jax.lax.scan(body, h, (params[name], cache[name]),
+                                     unroll=flags.inner_unroll())
+        new_caches[name] = new_cache
+    h = layers.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = _lm_head(params, cfg, h, quant, impl, interpret)
+    return logits, new_caches
+
+
+def lm_cache_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """Abstract cache pytree (shapes only) for pre-allocated decode."""
+    out = {}
+    for name, count, subs in layer_groups(cfg):
+        if len(subs) == 1:
+            shape = layer_cache_shape(cfg, subs[0][0], batch, seq)
+            out[name] = {k: (count,) + v for k, v in shape.items()}
+        else:
+            blk = {}
+            for i, (mx, ff) in enumerate(subs):
+                shape = layer_cache_shape(cfg, mx, batch, seq)
+                blk[f"sub{i}"] = {k: (count,) + v for k, v in shape.items()}
+            out[name] = blk
+    return out

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Train/prefill: chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via ``lax.scan``) — O(S * chunk) memory.
+Decode: single-step recurrence over the carried (B, H, P, N) state.
+
+Per the paper's partitioning philosophy, the in/out projections are the
+offloadable dot products (quantizable); the scan itself is "host-side"
+control flow (kept plain JAX — the CGLA paper would likewise leave the
+recurrence's sequential control on the host CPU).
+
+State cache: {"conv": (B, K-1, d_conv_channels), "ssm": (B, H, P, N)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags, layers
+from repro.models.layers import Params
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return s, d, di, nh, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig, fmt: str = "none") -> Params:
+    s, d, di, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (nh)]
+    zxbcdt = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": layers.linear_init(ks[0], d, zxbcdt, fmt),
+        "conv_w": jax.random.normal(
+            ks[1], (s.conv_kernel, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": layers.rmsnorm_init(di),
+        "out_proj": layers.linear_init(ks[2], di, d, fmt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    s, d, di, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray = None):
+    """Depthwise causal conv over (B, L, C); kernel (K, C).
+    Returns (out, new_state) where state carries the last K-1 inputs."""
+    k = w.shape[0]
+    bsz, l, c = xbc.shape
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)        # (B, K-1+L, C)
+    out = jnp.zeros((bsz, l, c), jnp.float32)
+    for i in range(k):
+        out = out + padded[:, i:i + l].astype(jnp.float32) * w[i]
+    out = out + b
+    new_state = padded[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int):
+    """SSD forward. x: (B, L, H, P); dt: (B, L, H); a: (H,) (negative);
+    bmat/cmat: (B, L, G, N) broadcast to heads. Returns (y, final_state)."""
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert h % g == 0
+    rep = h // g
+    bmat = jnp.repeat(bmat, rep, axis=2)                  # (B, L, H, N)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        bmat = jnp.pad(bmat, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        cmat = jnp.pad(cmat, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    lc = nc * chunk
+
+    lowp = jnp.bfloat16 if flags.mixed_intermediates() else jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(lowp)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, h, n).astype(lowp)
+    cc = cmat.reshape(b, nc, chunk, h, n).astype(lowp)
+
+    dta = dtc * a                                          # (B, C, c, H)
+    cum = jnp.cumsum(dta, axis=2)
+    # Intra-chunk quadratic term: decay(i, j) = exp(cum_i - cum_j), i >= j.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,C,i,j,H)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg),
+                      0.0).astype(lowp)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc,
+                        preferred_element_type=jnp.float32).astype(lowp) \
+        * decay
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores,
+                   dtc.astype(lowp), xc,
+                   preferred_element_type=jnp.float32)
+
+    # Chunk-final states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T.
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,C,c,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                        bc, (decay_states * dtc).astype(lowp), xc,
+                        preferred_element_type=jnp.float32)  # (B,C,H,N,P)
+
+    # Inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,C,H)
+
+    def scan_fn(s_prev, inp):
+        dec, st = inp                                      # (B,H), (B,H,N,P)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    # NOTE: this scan body is elementwise (negligible flops/bytes) — the
+    # heavy SSD einsums are outside it — so it stays a loop even during
+    # cost extrapolation (unrolling it only bloats compile time).
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                  # (B,C,H,N,P)
+
+    # Contribution of the incoming state to each position.
+    state_decay = jnp.exp(cum)                             # (B,C,c,H)
+    y_state = jnp.einsum("bcihn,bchnp,bcih->bcihp",
+                         cc, s_prevs.astype(lowp),
+                         state_decay.astype(lowp),
+                         preferred_element_type=jnp.float32)
+    y = (y + y_state).reshape(b, lc, h, p)[:, :l]
+    return y, s_final
+
+
+def ssm_apply(p: Params, cfg: ModelConfig, u: jnp.ndarray, *,
+              fmt: str = "none", impl: str = "ref", interpret: bool = True,
+              return_state: bool = False):
+    """Full-sequence mamba2 block. u: (B, L, d)."""
+    s, d, di, nh, _ = _dims(cfg)
+    zxbcdt = layers.linear_apply(p["in_proj"], u, fmt, impl=impl,
+                                 interpret=interpret)
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, bmat, cmat = jnp.split(xbc, [di, di + s.n_groups * s.d_state], axis=-1)
+
+    bsz, l, _ = u.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = x.reshape(bsz, l, nh, s.head_dim)
+    bm = bmat.reshape(bsz, l, s.n_groups, s.d_state)
+    cm = cmat.reshape(bsz, l, s.n_groups, s.d_state)
+    y, state = ssd_chunked(xh, dt, a, bm, cm, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, l, di).astype(u.dtype)
+    # Gated RMSNorm then out projection.
+    y = layers.rmsnorm_apply(p["norm"], y * jax.nn.silu(
+        z.astype(jnp.float32)).astype(u.dtype), cfg.norm_eps)
+    out = layers.linear_apply(p["out_proj"], y, fmt, impl=impl,
+                              interpret=interpret)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": state}
+    return out
+
+
+def ssm_decode(p: Params, cfg: ModelConfig, u: jnp.ndarray, cache: Dict, *,
+               fmt: str = "none", impl: str = "ref", interpret: bool = True):
+    """One-token recurrent step. u: (B, 1, d); cache {"conv", "ssm"}."""
+    s, d, di, nh, conv_dim = _dims(cfg)
+    bsz = u.shape[0]
+    zxbcdt = layers.linear_apply(p["in_proj"], u, fmt, impl=impl,
+                                 interpret=interpret)
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    x, bmat, cmat = jnp.split(xbc, [di, di + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    xh = x[:, 0].reshape(bsz, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // s.n_groups
+    bm = jnp.repeat(bmat[:, 0].reshape(bsz, s.n_groups, s.d_state),
+                    rep, axis=1)                           # (B, H, N)
+    cm = jnp.repeat(cmat[:, 0].reshape(bsz, s.n_groups, s.d_state),
+                    rep, axis=1)
+    da = jnp.exp(dt * a)                                   # (B, H)
+    ssm = cache["ssm"] * da[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bm, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", cm, ssm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = layers.rmsnorm_apply(p["norm"], y * jax.nn.silu(
+        z.astype(jnp.float32)).astype(u.dtype), cfg.norm_eps)
+    out = layers.linear_apply(p["out_proj"], y, fmt, impl=impl,
+                              interpret=interpret)
+    return out, {"conv": conv_state, "ssm": ssm}
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    s, d, di, nh, conv_dim = _dims(cfg)
+    return {"conv": (batch, s.conv_kernel - 1, conv_dim),
+            "ssm": (batch, nh, s.d_state, s.head_dim)}

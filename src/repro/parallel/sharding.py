@@ -1,0 +1,129 @@
+"""Sharding rules for the production meshes (divisibility-guarded).
+
+Mesh axes: ('data', 'model') single-pod 16x16; ('pod', 'data', 'model')
+multi-pod 2x16x16. Batch shards over ('pod','data') (= DP/FSDP axes);
+weights shard 2D over ('data','model') (FSDP x TP — GSPMD inserts the
+per-layer all-gathers); KV caches shard batch over DP axes and *sequence*
+over 'model' (flash-decoding style: GSPMD lowers the softmax/contraction
+over the sharded sequence into the LSE-merge collective pattern, which is
+how decode scales past num_kv_heads < axis size).
+
+Every rule checks divisibility and falls back to replication on that dim —
+this is what lets one rule set cover vocab 151936 and 49155, kv-heads 8 and
+2, experts 256 and 40, batch 256 and 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CACHE_SEQ_KEYS = {"k", "v", "ckv", "krope"}       # (..., B, S, ...) leaves
+_CACHE_STATE_KEYS = {"conv", "ssm"}                # (..., B, ...) leaves
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim > 0 and dim % _axis_size(mesh, axis) == 0
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+def weight_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Generic 2D TPxFSDP rule: last dim -> 'data', the first suitable of
+    (-2, -3) -> 'model'; 0/1-D params replicate."""
+    if len(shape) < 2:
+        return P()
+    spec = [None] * len(shape)
+    if _fits(shape[-1], mesh, "data"):
+        spec[-1] = "data"
+    for cand in (-2, -3):
+        if len(shape) >= -cand and _fits(shape[cand], mesh, "model"):
+            spec[cand] = "model"
+            break
+    return P(*spec)
+
+
+def param_specs(abstract_params, mesh: Mesh):
+    """Pytree of PartitionSpec matching the parameter pytree."""
+    def walk(node):
+        return jax.tree.map(lambda leaf: weight_spec(leaf.shape, mesh), node)
+    return walk(abstract_params)
+
+
+def param_shardings(abstract_params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(abstract_params, mesh))
+
+
+# ----------------------------------------------------------------------
+# Batches (train/prefill inputs)
+# ----------------------------------------------------------------------
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    spec = [None] * len(shape)
+    if len(shape) >= 1 and _fits(shape[0], mesh, tuple(dp)):
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def batch_shardings(abstract_batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh)),
+        abstract_batch)
+
+
+# ----------------------------------------------------------------------
+# KV / state caches (decode inputs)
+# ----------------------------------------------------------------------
+def cache_spec(path_key: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Caches are stacked (L, B, S, ...) or (L, B, ...): batch over DP,
+    sequence over 'model' (flash-decoding)."""
+    dp = dp_axes(mesh)
+    spec = [None] * len(shape)
+    if len(shape) >= 2 and _fits(shape[1], mesh, tuple(dp)):
+        spec[1] = dp if len(dp) > 1 else dp[0]
+    if path_key in _CACHE_SEQ_KEYS and len(shape) >= 3 and \
+            _fits(shape[2], mesh, "model"):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def cache_shardings(abstract_cache, mesh: Mesh):
+    def walk(node, key=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        return NamedSharding(mesh, cache_spec(key, node.shape, mesh))
+    return walk(abstract_cache)
+
+
+# ----------------------------------------------------------------------
+# Activation (residual-stream) constraint: sequence parallelism for train
+# ----------------------------------------------------------------------
+def activation_sharding(mesh: Mesh, seq_parallel: bool = True):
+    """(B, S, D) residual constraint: batch over DP, seq over 'model'.
+    Sequence parallelism keeps per-device activation memory (and remat
+    checkpoints) 1/model_axis of the full sequence."""
+    dp = dp_axes(mesh)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    if seq_parallel:
+        return NamedSharding(mesh, P(dp_entry, "model", None))
+    return NamedSharding(mesh, P(dp_entry, None, None))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

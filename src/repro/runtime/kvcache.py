@@ -1,0 +1,44 @@
+"""KV/state cache management for the serving engine.
+
+Contiguous pre-allocated caches (paper-faithful: llama.cpp uses a
+contiguous KV arena managed by the host, Fig. 4 keeps "KV cache management"
+on the host side). Paged attention is an orthogonal extension noted in
+DESIGN.md future work.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+
+
+def allocate(model: ModelAPI, batch: int, max_seq: int,
+             dtype=jnp.bfloat16):
+    """Zero-filled cache pytree sized for ``max_seq``."""
+    shapes = model.cache_shapes(batch, max_seq)
+
+    def mk(x):
+        return jnp.zeros(x, dtype) if isinstance(x, tuple) else x
+    return jax.tree.map(mk, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def pad_prefill_cache(model: ModelAPI, cache, batch: int, max_seq: int):
+    """Pad a prefill-produced cache (seq = prompt length) out to max_seq."""
+    shapes = model.cache_shapes(batch, max_seq)
+
+    def pad(c, target):
+        if not isinstance(target, tuple):
+            return c
+        pads = [(0, t - s) for s, t in zip(c.shape, target)]
+        if all(p == (0, 0) for p in pads):
+            return c
+        return jnp.pad(c, pads)
+    return jax.tree.map(pad, cache, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_nbytes(cache) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)))

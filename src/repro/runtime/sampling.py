@@ -1,0 +1,26 @@
+"""Token sampling (paper-faithful: the final softmax/sampling stays
+"host-side" — plain JAX ops, never offloaded/quantized)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+           top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32 tokens. temperature=0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    if top_p < 1.0:
+        sorted_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lf, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # Smallest set with cumulative prob >= top_p.
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
+        lf = jnp.where(lf < cutoff, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

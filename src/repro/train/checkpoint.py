@@ -1,0 +1,158 @@
+"""Checkpoint save/restore (fault tolerance substrate).
+
+msgpack container, atomic rename (a crashed writer never corrupts the
+latest checkpoint), optional async writer thread, keep-N pruning, and a
+``restore_or_init`` entry the trainer calls on every start — so a
+restarted/rescheduled job resumes transparently from the last step.
+
+Elastic re-meshing: checkpoints store host (replicated/gathered) arrays,
+so a restore may apply *different* shardings than the save — changing the
+device count between runs re-shards from the same artifact.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _pack_leaf(x) -> Dict:
+    arr = np.asarray(x)
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: Dict) -> np.ndarray:
+    return np.frombuffer(d["data"], d["dtype"]).reshape(d["shape"])
+
+
+def save(path: str, step: int, params, opt_state, extra: Optional[Dict] = None
+         ) -> str:
+    """Atomic checkpoint write. Returns final path."""
+    ckpt_dir = pathlib.Path(path)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "step": step,
+        "params": {k: _pack_leaf(v) for k, v in _flatten(params).items()},
+        "opt": {k: _pack_leaf(v) for k, v in _flatten(opt_state).items()},
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    final = ckpt_dir / f"ckpt_{step:08d}.msgpack"
+    tmp = ckpt_dir / f".tmp_{step:08d}_{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)          # atomic on POSIX
+    return str(final)
+
+
+class AsyncWriter:
+    """Fire-and-forget checkpoint writes on a daemon thread; ``wait()``
+    joins outstanding writes (trainer calls it before exit)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+        self.error: Optional[BaseException] = None
+
+    def submit(self, path, step, params, opt_state, extra=None):
+        # Device->host copy happens here (in the caller) so the async
+        # thread never touches device buffers mid-donation.
+        params = jax.tree.map(np.asarray, params)
+        opt_state = jax.tree.map(np.asarray, opt_state)
+        self.wait()
+
+        def work():
+            try:
+                self.last_path = save(path, step, params, opt_state, extra)
+            except BaseException as e:     # surfaced on next wait()
+                self.error = e
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error is not None:
+            err, self.error = self.error, None
+            raise err
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    d = pathlib.Path(path)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob("ckpt_*.msgpack"))
+    return str(cands[-1]) if cands else None
+
+
+def prune(path: str, keep: int) -> None:
+    d = pathlib.Path(path)
+    cands = sorted(d.glob("ckpt_*.msgpack"))
+    for old in cands[:-keep] if keep > 0 else []:
+        old.unlink(missing_ok=True)
+
+
+def restore(path: str, params_like, opt_like,
+            shardings: Optional[Tuple] = None):
+    """Restore (step, params, opt_state, extra) from a checkpoint file.
+    ``params_like``/``opt_like``: pytrees defining structure (+dtypes).
+    ``shardings``: optional (param_shardings, opt_shardings) to place
+    restored arrays onto a (possibly different) mesh — elastic re-shard."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+
+    def rebuild(tree, packed, shard_tree):
+        flat = _flatten(tree)
+        shards = _flatten(shard_tree) if shard_tree is not None else {}
+        out_flat = {}
+        for k, leaf in flat.items():
+            arr = _unpack_leaf(packed[k])
+            assert tuple(arr.shape) == tuple(leaf.shape), \
+                f"shape mismatch for {k}: {arr.shape} vs {leaf.shape}"
+            if k in shards:
+                out_flat[k] = jax.device_put(arr, shards[k])
+            else:
+                out_flat[k] = jnp.asarray(arr)
+        # Re-inflate into the original structure.
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = list(_flatten(tree).keys())
+        return jax.tree_util.tree_unflatten(
+            treedef, [out_flat[k] for k in keys])
+
+    p_sh, o_sh = shardings if shardings is not None else (None, None)
+    params = rebuild(params_like, payload["params"], p_sh)
+    opt_state = rebuild(opt_like, payload["opt"], o_sh)
+    return payload["step"], params, opt_state, payload.get("extra", {})
+
+
+def restore_or_init(path: str, init_fn, shardings=None):
+    """Fault-tolerant entry: resume from the newest checkpoint if present,
+    otherwise initialize fresh. ``init_fn() -> (step, params, opt_state)``."""
+    latest = latest_checkpoint(path)
+    if latest is None:
+        return init_fn() + ({},)
+    step0, params0, opt0 = init_fn()
+    step, params, opt_state, extra = restore(latest, params0, opt0,
+                                             shardings)
+    return step, params, opt_state, extra

@@ -1,0 +1,140 @@
+"""Serving engine + trainer/checkpoint/elastic integration tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ASSIGNED
+from repro.models.api import build_model
+from repro.runtime.engine import Engine
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticDataset
+from repro.train.elastic import ElasticRunner, StepMonitor
+from repro.train.optimizer import adamw_init
+from repro.train.trainer import make_train_step
+
+
+def test_engine_generate_greedy(rng):
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    engine = Engine(model, params, max_seq=32)
+    prompt = jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)
+    out, stats = engine.generate(prompt, 8)
+    assert out.shape == (2, 8)
+    assert stats.tokens_out == 8 and stats.tokens_in == 8
+    assert stats.cache_bytes > 0
+    # Greedy decode is deterministic.
+    out2, _ = engine.generate(prompt, 8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_engine_quantized_paths(rng):
+    """The paper's hybrid flow: dense init -> quantize -> serve. Q8_0
+    generations should mostly agree with dense greedy decode."""
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    dense = model.init(rng)
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    e_dense = Engine(model, dense, max_seq=24)
+    out_d, _ = e_dense.generate(prompt, 6)
+    e_q8 = Engine.from_dense(model, dense, "q8_0", max_seq=24)
+    out_q, stats = e_q8.generate(prompt, 6)
+    assert out_q.shape == out_d.shape and stats.e2e_s > 0
+    # Token-level agreement is brittle with random near-tie logits; check
+    # the quantized model's prefill logits stay close to dense instead.
+    batch = {"tokens": prompt}
+    ld, _ = model.prefill(dense, batch)
+    q8 = e_q8.params
+    lq, _ = model.prefill(q8, batch, quant="q8_0")
+    diff = float(jnp.max(jnp.abs(ld.astype(jnp.float32)
+                                 - lq.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(ld.astype(jnp.float32)))) + 1e-9
+    assert diff / scale < 0.15, (diff, scale)
+
+
+def test_loss_decreases_on_copy_task(rng, tmp_path):
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=3e-3, total_steps=30, warmup_steps=3,
+                     checkpoint_every=1000,
+                     checkpoint_dir=str(tmp_path / "ck"))
+    data = SyntheticDataset(cfg.vocab_size, 32, 4, task="copy", pool=2)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, tc))
+    losses = []
+    for i in range(30):
+        params, opt, m = step(params, opt, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_checkpoint_roundtrip_and_prune(rng, tmp_path):
+    cfg = ASSIGNED["mamba2-1.3b"].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    opt = adamw_init(params)
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(d, s, params, opt, {"data_step": s})
+    ckpt.prune(d, keep=2)
+    assert ckpt.latest_checkpoint(d).endswith("00000003.msgpack")
+    step, p2, o2, extra = ckpt.restore(ckpt.latest_checkpoint(d),
+                                       params, opt)
+    assert step == 3 and extra["data_step"] == 3
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_runner_recovers_from_failure(rng, tmp_path):
+    """Inject a mid-run exception (preempted-node stand-in): the runner
+    restores from the last checkpoint and completes all steps."""
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=1,
+                     checkpoint_every=2, checkpoint_dir=str(tmp_path / "ck"),
+                     async_checkpoint=False)
+    data = SyntheticDataset(cfg.vocab_size, 16, 2, task="copy")
+
+    def init_fn():
+        p = model.init(jax.random.PRNGKey(0))
+        return p, adamw_init(p)
+
+    raw_step = jax.jit(make_train_step(model, tc))
+    fail_at = {"step": 5, "done": False}
+
+    def flaky_step(params, opt_state, batch):
+        if not fail_at["done"] and int(opt_state["step"]) + 1 == fail_at["step"]:
+            fail_at["done"] = True
+            raise RuntimeError("injected node failure")
+        return raw_step(params, opt_state, batch)
+
+    runner = ElasticRunner(tc, flaky_step, init_fn, data)
+    result = runner.run(10)
+    assert result["step"] == 10
+    assert result["restarts"] == 1
+    assert ckpt.latest_checkpoint(tc.checkpoint_dir) is not None
+
+
+def test_straggler_monitor():
+    mon = StepMonitor(straggler_factor=3.0)
+    for _ in range(8):
+        assert not mon.record(0.1)
+    assert mon.record(1.0)          # 10x median -> straggler
+    assert mon.stragglers == 1
+
+
+def test_data_pipeline_deterministic_resume():
+    ds = SyntheticDataset(1000, 16, 4, seed=3, task="lm")
+    b5a = ds.batch_at(5)
+    it = ds.iterate(start_step=5)
+    b5b = next(it)
+    np.testing.assert_array_equal(np.asarray(b5a["tokens"]),
+                                  np.asarray(b5b["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b5a["labels"][:, :-1]),
+                                  np.asarray(b5a["tokens"][:, 1:]))

@@ -1,0 +1,110 @@
+"""Per-Pallas-kernel shape/dtype sweeps vs the pure-jnp oracles (ref.py).
+
+Each kernel runs in interpret=True (the kernel body executes on CPU) and is
+asserted allclose against the oracle. Shapes intentionally include
+non-multiples of the block sizes to exercise the padding paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import pack
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+SHAPES = [(4, 512, 16), (17, 768, 33), (1, 256, 128), (3, 1280, 7)]
+
+
+@pytest.mark.parametrize("fmt", ["fp16", "q8_0", "q6_k", "q3_k"])
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_matmul_kernel_vs_oracle(fmt, mkn, rng):
+    m, k, n = mkn
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (n, k), jnp.float32) * 0.1
+    planes = pack.quantize(w, fmt)
+    y_ref = ops.quantized_matmul(x, planes, fmt, impl="ref")
+    y_pl = ops.quantized_matmul(x, planes, fmt, impl="pallas",
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("fmt", ["q8_0", "q6_k", "q3_k"])
+def test_matmul_kernel_bf16_activations(fmt, rng):
+    """bf16 inputs (TPU serving dtype) stay close to the f32 oracle."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (8, 512), jnp.float32)
+    w = jax.random.normal(k2, (32, 512), jnp.float32) * 0.1
+    planes = pack.quantize(w, fmt)
+    y_ref = ops.quantized_matmul(x, planes, fmt, impl="ref")
+    y_pl = ops.quantized_matmul(x.astype(jnp.bfloat16), planes, fmt,
+                                impl="pallas", interpret=True)
+    rel = float(jnp.max(jnp.abs(y_pl - y_ref))
+                / (jnp.max(jnp.abs(y_ref)) + 1e-9))
+    assert rel < 0.05
+
+
+def test_q3k_cvt53_kernel_path(rng):
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (8, 512), jnp.float32)
+    w = jax.random.normal(k2, (16, 512), jnp.float32) * 0.1
+    p = pack.quantize(w, "q3_k")
+    ya = ops.quantized_matmul(x, p, "q3_k", impl="pallas",
+                              approx_cvt53=True, interpret=True)
+    yr = ops.quantized_matmul(x, p, "q3_k", impl="ref", approx_cvt53=True)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_block_shape_sweep(rng):
+    """BlockSpec tiling (the LMM-size analog) never changes results."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (16, 1024), jnp.float32)
+    w = jax.random.normal(k2, (64, 1024), jnp.float32) * 0.1
+    planes = pack.quantize(w, "q8_0")
+    y0 = ops.quantized_matmul(x, planes, "q8_0", impl="ref")
+    for bm, bn, bk in [(8, 64, 256), (16, 128, 512), (16, 64, 1024)]:
+        y = ops.quantized_matmul(x, planes, "q8_0", impl="pallas",
+                                 interpret=True, block_m=bm, block_n=bn,
+                                 block_k=bk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d,causal", [
+    (1, 4, 2, 256, 64, True),
+    (2, 8, 8, 128, 32, False),
+    (1, 2, 1, 300, 64, True),      # non-multiple seq (padding path)
+    (1, 6, 2, 128, 128, True),
+])
+def test_flash_attention_vs_oracle(b, h, hkv, s, d, causal, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32) * 0.3
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32) * 0.3
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    o_pl = flash_attention(q, k, v, causal=causal, block_q=128,
+                           block_k=128, interpret=True)
+    o_rf = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_rf),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_matches_flash(rng):
+    """The model's pure-jnp chunked attention == the Pallas flash kernel."""
+    from repro.models.attention import chunked_attention
+    k1, k2, k3 = jax.random.split(rng, 3)
+    b, h, hkv, s, d = 2, 4, 2, 256, 32
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32) * 0.3
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32) * 0.3
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    o_fl = flash_attention(q, k, v, causal=True, interpret=True,
+                           block_q=128, block_k=128)
+    # chunked_attention uses (B, S, H, D) layout.
+    o_ch = chunked_attention(jnp.transpose(q, (0, 2, 1, 3)),
+                             jnp.transpose(k, (0, 2, 1, 3)),
+                             jnp.transpose(v, (0, 2, 1, 3)),
+                             causal=True, sm_scale=d ** -0.5, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(jnp.transpose(o_ch, (0, 2, 1, 3))),
+                               np.asarray(o_fl), rtol=1e-4, atol=1e-4)

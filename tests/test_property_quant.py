@@ -1,0 +1,72 @@
+"""Hypothesis property tests for the quantization core + coalescing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coalesce
+from repro.core.quant import dequant, pack
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([1, 2, 4]))
+def test_pack_roundtrip_identity(rows, words, seed, nbits):
+    per = 32 // nbits
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    vals = rng.randint(0, 2 ** nbits, size=(rows, words * per))
+    packed = pack.pack_bits(jnp.asarray(vals), nbits)
+    out = np.asarray(pack.unpack_bits(packed, nbits))
+    np.testing.assert_array_equal(out, vals)
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.001, 10.0))
+def test_q8_0_per_block_error_bound(seed, scale):
+    """|w - dequant(quant(w))| <= d/2 + fp16 scale error, per element."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    w = jnp.asarray(rng.randn(2, 64) * scale, jnp.float32)
+    p = pack.quantize(w, "q8_0")
+    wd = dequant.dequantize_q8_0(p)
+    d = np.asarray(p["d"].astype(jnp.float32))      # (2, 2)
+    bound = np.repeat(d, 32, axis=1) * 0.51 + 1e-6
+    err = np.abs(np.asarray(wd - w))
+    assert (err <= bound).all()
+
+
+@given(st.integers(0, 10 ** 6))
+def test_q6k_q3k_error_monotone(seed):
+    """Lower bit-width must not beat higher bit-width on the same data."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    w = jnp.asarray(rng.randn(4, 256) * 0.1, jnp.float32)
+    errs = {}
+    for fmt in ["q8_0", "q6_k", "q3_k"]:
+        wd = dequant.DEQUANTIZERS[fmt](pack.quantize(w, fmt))
+        errs[fmt] = float(jnp.linalg.norm(wd - w))
+    assert errs["q8_0"] <= errs["q6_k"] * 1.05
+    assert errs["q6_k"] <= errs["q3_k"] * 1.05
+
+
+@given(st.integers(0, 10 ** 6),
+       st.sampled_from(["fp16", "q8_0", "q6_k", "q3_k"]))
+def test_coalesce_roundtrip_byte_exact(seed, fmt):
+    """§III.D plane aggregation is byte-exact for every format."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    w = jnp.asarray(rng.randn(4, 256), jnp.float32)
+    planes = pack.quantize(w, fmt)
+    buf, manifest = coalesce.coalesce_planes(planes)
+    restored = coalesce.split_planes(buf, manifest)
+    for k in planes:
+        np.testing.assert_array_equal(np.asarray(planes[k]),
+                                      np.asarray(restored[k]))
+
+
+@given(st.floats(1e3, 1e9), st.integers(1, 64))
+def test_transfer_model_coalescing_never_slower(nbytes, pieces):
+    """Coalesced transfers are never slower than naive ones."""
+    tm = coalesce.TransferModel()
+    assert tm.load_time([nbytes] * 4, True) <= \
+        tm.load_time([nbytes] * 4, False) + 1e-12
+    assert tm.drain_time(nbytes, True, pieces) <= \
+        tm.drain_time(nbytes, False, pieces) + 1e-12

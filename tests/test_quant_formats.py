@@ -1,0 +1,79 @@
+"""Quantization format unit tests (paper §III.B/§III.C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import dequant, pack
+from repro.core.quant.formats import FORMATS, RECIPES, kquant_pad
+
+FMTS = ["fp16", "q8_0", "q6_k", "q3_k"]
+TOL = {"fp16": 1e-3, "q8_0": 0.01, "q6_k": 0.06, "q3_k": 0.30}
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_roundtrip_error(fmt, rng):
+    w = jax.random.normal(rng, (16, 512), jnp.float32) * 0.05
+    planes = pack.quantize(w, fmt)
+    wd = dequant.DEQUANTIZERS[fmt](planes)
+    rel = float(jnp.linalg.norm(wd - w) / jnp.linalg.norm(w))
+    assert rel < TOL[fmt], (fmt, rel)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_physical_bpw_matches_format(fmt, rng):
+    w = jax.random.normal(rng, (8, 1024), jnp.float32)
+    planes = pack.quantize(w, fmt)
+    bpw = pack.planes_nbytes(planes) * 8 / w.size
+    assert abs(bpw - FORMATS[fmt].physical_bpw) < 1e-6
+
+
+def test_q3k_memory_reduction_vs_fp16(rng):
+    """Paper: ~4.5x reduction for the Q3_K family vs FP16."""
+    w = jax.random.normal(rng, (64, 2048), jnp.float32)
+    fp16_b = pack.planes_nbytes(pack.quantize(w, "fp16"))
+    q3_b = pack.planes_nbytes(pack.quantize(w, "q3_k"))
+    assert 4.2 < fp16_b / q3_b < 5.0
+
+
+@pytest.mark.parametrize("nbits", [1, 2, 4])
+def test_pack_unpack_exact(nbits, rng):
+    vals = jax.random.randint(rng, (6, 128), 0, 2 ** nbits)
+    words = pack.pack_bits(vals, nbits)
+    assert words.dtype == jnp.int32
+    out = pack.unpack_bits(words, nbits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+
+def test_k_padding(rng):
+    """K not a multiple of 256 must zero-pad (qwen2-72b d_ff=29568 case)."""
+    w = jax.random.normal(rng, (4, 300), jnp.float32) * 0.1
+    planes = pack.quantize(w, "q6_k")
+    wd = dequant.DEQUANTIZERS["q6_k"](planes)
+    assert wd.shape == (4, 512)
+    assert float(jnp.max(jnp.abs(wd[:, 300:]))) == 0.0
+    assert kquant_pad(300, "q6_k") == 512
+
+
+def test_cvt53_scale_approx(rng):
+    """OP_CVT53: 5-bit scale approximation error is small vs Q3_K's own."""
+    w = jax.random.normal(rng, (16, 1024), jnp.float32) * 0.1
+    p = pack.quantize(w, "q3_k")
+    w3 = dequant.dequantize_q3_k(p)
+    w3a = dequant.dequantize_q3_k(p, approx_cvt53=True)
+    base = float(jnp.linalg.norm(w3 - w))
+    extra = float(jnp.linalg.norm(w3a - w3))
+    assert extra < 0.35 * base, "CVT53 approximation should be negligible"
+
+
+def test_recipes_keep_norms_fp16():
+    for name, recipe in RECIPES.items():
+        assert recipe["norm"] == "fp16", name
+
+
+def test_q8_0_block_structure(rng):
+    """Scales are per-32 blocks; each block's max quant magnitude <= 127."""
+    w = jax.random.normal(rng, (4, 128), jnp.float32)
+    p = pack.quantize(w, "q8_0")
+    assert p["qs"].shape == (4, 128) and p["d"].shape == (4, 4)
+    assert int(jnp.max(jnp.abs(p["qs"].astype(jnp.int32)))) <= 127

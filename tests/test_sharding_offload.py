@@ -1,0 +1,125 @@
+"""Sharding rules, HLO collective parsing, offload policy, IMAX model."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import roofline
+from repro.configs.registry import ASSIGNED, PAPER_MODELS
+from repro.core.imax_model import asic_28nm, fpga_prototype
+from repro.core.offload import OffloadPolicy
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.api import build_model
+from repro.parallel import sharding
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH2D = _FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("shape,expect", [
+    ((4096, 8192), P("model", "data")),
+    ((128256, 1024), P("model", "data")),
+    ((49155, 1536), P(None, "data")),          # granite vocab: not divisible
+    ((28, 3072, 8192), P(None, "model", "data")),
+    ((58, 256, 2048, 7168), P(None, None, "model", "data")),  # expert bank
+    ((1024,), P()),
+    ((28, 7, 128), P(None, None, "data")),
+])
+def test_weight_spec_rules(shape, expect):
+    assert sharding.weight_spec(shape, MESH2D) == expect
+
+
+def test_cache_spec_rules():
+    m = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # (L, B, S, H, D): batch over DP, seq over model.
+    assert sharding.cache_spec("k", (28, 128, 32768, 8, 128), m) == \
+        P(None, ("pod", "data"), "model", None, None)
+    # batch=1 (long_500k): batch unshardable -> replicated dim.
+    assert sharding.cache_spec("v", (4, 1, 524288, 8, 128), m) == \
+        P(None, None, "model", None, None)
+    # ssm state: no sequence dim to shard.
+    assert sharding.cache_spec("ssm", (48, 128, 64, 128, 64), m) == \
+        P(None, ("pod", "data"), None, None, None)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,512,2048]{2,1,0} all-gather(bf16[1,512,2048]{2,1,0} %x)
+  %ar.1 = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %y)
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(f32[1024]{0} %a, f32[1024]{0} %b)
+  %ags = bf16[8,8]{1,0} all-gather-start(bf16[1,8]{1,0} %w)
+  %agd = bf16[8,8]{1,0} all-gather-done(bf16[8,8]{1,0} %ags)
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 512 * 2048 * 2 + 8 * 8 * 2
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+
+
+def test_production_mesh_shapes():
+    # NOTE: on this 1-CPU container jax.make_mesh would need 512 devices;
+    # we only validate the spec here — launch/dryrun.py builds the real
+    # 16x16 and 2x16x16 meshes under XLA_FLAGS (see out/dryrun/*.json).
+    n = len(jax.devices())
+    mesh = make_host_mesh(data=n)
+    assert set(mesh.axis_names) == {"data", "model"}
+
+
+def test_offload_table_paper_qualitative():
+    """Table 2's headline: Qwen3-8B Q8_0 not offloaded; others high."""
+    policy = OffloadPolicy(asic_28nm())
+    t8 = policy.offload_table(PAPER_MODELS["qwen3-8b"], "q8_0", seq=32)
+    assert t8["q8_0"] == 0.0
+    assert t8["fp16"] == 100.0
+    assert t8["total"] < 20.0
+    t06 = policy.offload_table(PAPER_MODELS["qwen3-0.6b"], "q3_k_s", seq=32)
+    assert t06["total"] > 95.0
+
+
+def test_imax_macro_anchor_within_tolerance():
+    """Qwen3-0.6B Q3_K_S [32:16] FPGA total 16.3 s (paper §V.B)."""
+    r = fpga_prototype().e2e(PAPER_MODELS["qwen3-0.6b"], "q3_k_s", 32, 16)
+    assert abs(r["latency_s"] - 16.3) / 16.3 < 0.15
+    br = r["breakdown"]
+    # decode must be LOAD-bound; prefill compute(EXEC)-heavy.
+    dec = br["decode"]
+    assert max(dec, key=dec.get) == "LOAD"
+    pre = br["prefill"]
+    assert pre["EXEC"] > 0.4 * sum(pre.values())
+
+
+def test_imax_pdp_anchor():
+    """Qwen3-1.7B Q8_0 [16:4] 28nm PDP 15.5 J (paper §IV.B)."""
+    r = asic_28nm().e2e(PAPER_MODELS["qwen3-1.7b"], "q8_0", 16, 4)
+    assert abs(r["pdp_j"] - 15.5) / 15.5 < 0.25
+
+
+def test_lane_scaling_saturates_at_two():
+    cfg = PAPER_MODELS["qwen3-0.6b"]
+    lat = {l: asic_28nm(lanes=l).e2e(cfg, "q8_0", 32, 16)["latency_s"]
+           for l in (1, 2, 4, 8)}
+    assert lat[2] <= lat[1] + 1e-9
+    assert lat[4] > lat[2] and lat[8] > lat[4]
+
+
+def test_lmm_64kb_is_pdp_optimal():
+    cfg = PAPER_MODELS["qwen3-1.7b"]
+    pdp = {kb: asic_28nm(lmm_kb=kb).e2e(cfg, "q8_0", 32, 16)["pdp_j"]
+           for kb in (16, 64, 256, 512)}
+    assert pdp[64] < pdp[256] < pdp[512]
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.analysis.roofline import model_flops_for
+    from repro.configs.shapes import SHAPES
+    cfg = ASSIGNED["deepseek-v3-671b"]
+    counts = cfg.param_counts()
+    assert counts["active"] < 0.1 * counts["total"]
+    mf = model_flops_for(cfg, SHAPES["train_4k"])
+    assert mf == 6.0 * counts["active"] * 256 * 4096
