@@ -11,6 +11,7 @@ from repro.analysis.power import DEVICE_POWER, gpu_metrics
 from repro.configs.registry import PAPER_MODELS
 from repro.core.imax_model import asic_28nm, fpga_prototype
 from repro.core.quant.formats import FORMATS
+from repro.runtime.transfers import TransferLedger
 
 WORKLOADS = [(8, 1), (16, 4), (32, 16)]
 QUANTS = ["fp16", "q8_0", "q3_k_s"]
@@ -19,6 +20,16 @@ QUANTS = ["fp16", "q8_0", "q3_k_s"]
 def model_bytes(cfg, quant: str) -> float:
     fmt = {"q8_0": "q8_0", "q3_k_s": "q3_k", "fp16": "fp16"}[quant]
     return cfg.param_counts()["total"] * FORMATS[fmt].logical_bpw / 8.0
+
+
+def bytes_per_token(cfg, quant: str, n_in: int, n_out: int) -> float:
+    """Transferred bytes per generated token for one [in:out] workload —
+    the same ledger the live serving engine charges, driven analytically."""
+    led = TransferLedger(cfg, quant)
+    led.charge_prefill(n_in)
+    for i in range(n_out):
+        led.charge_decode_step(n_in + i)
+    return led.bytes_per_token()
 
 
 def main() -> None:
@@ -30,10 +41,13 @@ def main() -> None:
                 wl = f"{mname}-{quant}-[{n_in}:{n_out}]"
                 rf = fpga.e2e(cfg, quant, n_in, n_out)
                 ra = asic.e2e(cfg, quant, n_in, n_out)
+                bpt = bytes_per_token(cfg, quant, n_in, n_out)
                 emit(f"e2e_latency/imax_fpga/{wl}", rf["latency_s"] * 1e6,
-                     f"latency_s={rf['latency_s']:.3f}")
+                     f"latency_s={rf['latency_s']:.3f} "
+                     f"bytes_per_tok_MB={bpt/1e6:.2f}")
                 emit(f"e2e_latency/imax_28nm/{wl}", ra["latency_s"] * 1e6,
-                     f"latency_s={ra['latency_s']:.3f}")
+                     f"latency_s={ra['latency_s']:.3f} "
+                     f"bytes_per_tok_MB={bpt/1e6:.2f}")
                 mb = model_bytes(cfg, quant)
                 act = cfg.param_counts()["active"]
                 for dev_id, dev in DEVICE_POWER.items():

@@ -1,0 +1,59 @@
+"""Continuous-batching serving benchmark: throughput vs batch occupancy.
+
+Replays the same request stream through the slot-arena engine at several
+arena sizes and reports decode throughput, mean occupancy, per-request
+latency percentiles, and the transfer ledger's bytes-per-token — the live
+analog of the paper's §V.A transfer-bottleneck analysis. Runs on the
+reduced model (CPU-friendly); the analytic full-size numbers live in
+bench_e2e_latency.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.registry import ASSIGNED
+from repro.models.api import build_model
+from repro.runtime.engine import ServingEngine
+from repro.runtime.request import Request
+
+ARCH = "qwen3-0.6b"
+N_REQUESTS = 8
+GEN = 8
+PROMPT_MAX = 16
+SLOT_SWEEP = (1, 2, 4, 8)
+
+
+def make_requests(cfg, rng: np.random.RandomState):
+    reqs = []
+    for i in range(N_REQUESTS):
+        L = int(rng.randint(4, PROMPT_MAX + 1))
+        reqs.append(Request(rid=i, tokens=rng.randint(0, cfg.vocab_size, L),
+                            max_new_tokens=GEN))
+    return reqs
+
+
+def main() -> None:
+    cfg = ASSIGNED[ARCH].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    for slots in SLOT_SWEEP:
+        engine = ServingEngine(model, params, num_slots=slots,
+                               max_seq=PROMPT_MAX + GEN)
+        reqs = make_requests(cfg, np.random.RandomState(0))
+        report = engine.serve(reqs, seed=0)
+        st = report.stats
+        pct = report.latency_percentiles((50, 99))
+        emit(f"serving/{ARCH}/slots{slots}/throughput",
+             st.e2e_s / max(st.decode_tokens, 1) * 1e6,
+             f"tok_per_s={report.throughput_tok_s:.2f} "
+             f"occupancy={report.sched.mean_occupancy:.2f} "
+             f"reuses={report.sched.slot_reuses} "
+             f"p50_ms={pct[50]*1e3:.0f} p99_ms={pct[99]*1e3:.0f} "
+             f"bytes_per_tok_MB={report.transfers.bytes_per_token/1e6:.3f} "
+             f"step_compiles={report.step_compiles}")
+
+
+if __name__ == "__main__":
+    main()

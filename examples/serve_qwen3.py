@@ -31,7 +31,7 @@ for quant in ["none", "q8_0", "q3_k_s"]:
     out, stats = engine.generate(prompt, N_OUT)
     print(f"  quant={quant:7s} prefill={stats.prefill_s*1e3:7.1f}ms "
           f"decode={stats.decode_s*1e3:7.1f}ms "
-          f"({stats.decode_tok_per_s:6.1f} tok/s/seq) "
+          f"({stats.decode_tok_per_s/4:6.1f} tok/s/seq) "
           f"cache={stats.cache_bytes/1e3:.0f}KB")
 
 print("\nmodeled full-size Qwen3-0.6B on IMAX 28nm vs GPUs "

@@ -85,6 +85,30 @@ def model_kernel_calls(cfg: ModelConfig, quant: str, seq: int,
     return calls
 
 
+def phase_transfer_bytes(cfg: ModelConfig, quant: str, seq: int,
+                         batch: int = 1, decode: bool = False,
+                         decisions: Dict[str, bool] = None) -> Dict[str, float]:
+    """Host<->accelerator DMA bytes of one forward pass (prefill over
+    ``seq`` tokens, or one decode step against a ``seq``-deep KV), summed
+    from the same ``KernelCall`` byte accounting the offload policy uses.
+
+    ``decisions``: optional {kernel name: offloaded} table (e.g. from
+    ``OffloadPolicy.decide_table``) — host-resident kernels move no bytes.
+    Returns {"weights": .., "acts": .., "outs": ..} where weights+acts flow
+    host->device (LOAD) and outs device->host (DRAIN). Note the fp16
+    attention calls' "weights" are the KV cache itself — KV streaming is
+    accounted here, not as a separate category.
+    """
+    w = a = o = 0.0
+    for c in model_kernel_calls(cfg, quant, seq, batch, decode):
+        if decisions is not None and not decisions.get(c.name, True):
+            continue
+        w += c.weight_bytes
+        a += c.act_bytes
+        o += c.out_bytes
+    return {"weights": w, "acts": a, "outs": o}
+
+
 @dataclasses.dataclass
 class OffloadDecision:
     call: KernelCall

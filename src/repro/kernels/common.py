@@ -68,9 +68,10 @@ def end_of_k(o_ref, acc_ref) -> None:
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def matmul_compiler_params() -> pltpu.CompilerParams:
-    return pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
+def matmul_compiler_params():
+    # jax 0.4.x names this TPUCompilerParams; >= 0.6 renamed it.
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
 
 
 def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:

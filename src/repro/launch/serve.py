@@ -1,22 +1,140 @@
-"""Serving launcher — llama.cpp-analog batch generation.
+"""Serving launcher — continuous-batching request-stream driver.
+
+Stream mode (default): replay a stream of staggered requests (Poisson or
+back-to-back arrivals) through the slot-arena engine, reporting per-request
+latency percentiles, throughput vs batch occupancy, and the transfer
+ledger's bytes-per-token breakdown (the paper's §V.A bottleneck metric,
+measured live instead of modeled):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --quant q8_0 --prompt-len 32 --gen 16 --batch 4
+      --quant q8_0 --requests 8 --slots 4 --arrival poisson --rate 4
 
-Reports the paper's workload metrics: prefill/decode split, tokens/s, and
-modeled PDP/EDP via the device power table.
+Batch mode (legacy lockstep interface, kept for the paper's fixed [in:out]
+workload grid):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --mode batch \
+      --prompt-len 32 --gen 16 --batch 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.api import build_model
-from repro.runtime.engine import Engine
-from repro.analysis.power import DEVICE_POWER
+from repro.runtime.engine import Engine, ServingEngine
+from repro.runtime.request import Request, SamplingParams
+
+
+def make_extras(cfg, batch: int):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jnp.zeros(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.zeros(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return extras
+
+
+def build_stream(cfg, args, rng: np.random.RandomState):
+    """Request stream with randomized lengths + Poisson/back-to-back
+    arrival offsets."""
+    lo = max(args.prompt_len // 2, 2)
+    samp = SamplingParams(temperature=args.temperature)
+    t = 0.0
+    reqs = []
+    for i in range(args.requests):
+        L = int(rng.randint(lo, args.prompt_len + 1))
+        if args.arrival == "poisson" and args.rate > 0:
+            t += float(rng.exponential(1.0 / args.rate))
+        extras = make_extras(cfg, 1)
+        reqs.append(Request(
+            rid=i, tokens=rng.randint(0, cfg.vocab_size, L),
+            max_new_tokens=args.gen, sampling=samp,
+            arrival_s=t if args.arrival == "poisson" else 0.0,
+            extras=extras or None))
+    return reqs
+
+
+def offload_decisions(cfg, quant: str, seq: int, n_out: int):
+    """Static offload table (paper Table 2) applied to the live ledger so
+    host-resident kernels charge no DMA bytes."""
+    from repro.core.imax_model import asic_28nm
+    from repro.core.offload import OffloadPolicy, model_kernel_calls
+
+    q = quant if quant != "none" else "fp16"
+    prefill = model_kernel_calls(cfg, q, seq, 1, decode=False)
+    decode = [dataclasses.replace(c, count=c.count * n_out)
+              for c in model_kernel_calls(cfg, q, seq, 1, decode=True)]
+    by_name = {}
+    for c in prefill + decode:
+        by_name.setdefault(c.name, []).append(c)
+    return OffloadPolicy(asic_28nm()).decide_table(prefill, by_name)
+
+
+def run_stream(cfg, model, params, args) -> None:
+    rng = np.random.RandomState(args.seed)
+    reqs = build_stream(cfg, args, rng)
+    max_seq = args.max_seq or (args.prompt_len + args.gen)
+    decisions = offload_decisions(cfg, args.quant, args.prompt_len,
+                                  args.gen) if args.offload_policy else None
+    if args.quant != "none":
+        from repro.core import convert
+        params = convert.quantize_params(params, args.quant)
+    engine = ServingEngine(
+        model, params, quant=args.quant, num_slots=args.slots,
+        max_seq=max_seq, offload_decisions=decisions,
+        host_sampling=args.host_sampling)
+
+    report = engine.serve(reqs, seed=args.seed)
+    st = report.stats
+    pct = report.latency_percentiles((50, 90, 99))
+    print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
+          f"({args.arrival}) slots={args.slots} gen={args.gen}")
+    print(f"  completed {report.sched.completed}/{args.requests} | "
+          f"slot reuses {report.sched.slot_reuses} | "
+          f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} | "
+          f"decode-step compiles {report.step_compiles}")
+    print(f"  prefill {st.prefill_s*1e3:.1f} ms ({st.prefill_tokens} tok) | "
+          f"decode {st.decode_s*1e3:.1f} ms ({st.decode_tokens} tok, "
+          f"{st.decode_tok_per_s:.1f} tok/s) | "
+          f"throughput {report.throughput_tok_s:.1f} tok/s | "
+          f"arena {st.cache_bytes/1e6:.1f} MB")
+    print(f"  latency p50 {pct[50]*1e3:.0f} ms | p90 {pct[90]*1e3:.0f} ms | "
+          f"p99 {pct[99]*1e3:.0f} ms")
+    print("  transfer ledger (host<->device):")
+    exec_s = {"prefill": st.prefill_s, "decode": st.decode_s}
+    for line in report.ledger.summary_lines(exec_s):
+        print(f"    {line}")
+    first = report.sequences[0]
+    print(f"  first request tokens: {first.generated[:8]}")
+
+
+def run_batch(cfg, model, params, args) -> None:
+    max_seq = args.max_seq or (args.prompt_len + args.gen)
+    engine = Engine.from_dense(model, params, args.quant, max_seq=max_seq)
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size, jnp.int32)
+    extras = make_extras(cfg, args.batch)
+    out, stats = engine.generate(prompt, args.gen,
+                                 temperature=args.temperature,
+                                 extras=extras or None)
+    print(f"arch={cfg.name} quant={args.quant} "
+          f"[{args.prompt_len}:{args.gen}] batch={args.batch}")
+    # decode_tok_per_s aggregates the whole batch; divide for per-sequence.
+    print(f"  prefill {stats.prefill_s*1e3:.1f} ms | "
+          f"decode {stats.decode_s*1e3:.1f} ms "
+          f"({stats.decode_tok_per_s/args.batch:.1f} tok/s/seq, "
+          f"{stats.decode_tok_per_s:.1f} tok/s total) | "
+          f"cache {stats.cache_bytes/1e6:.1f} MB | "
+          f"bytes/token {stats.transfers.bytes_per_token/1e6:.2f} MB")
+    print(f"  first generated tokens: {out[0, :8].tolist()}")
 
 
 def main() -> None:
@@ -25,11 +143,28 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="none",
                     choices=["none", "fp16", "q8_0", "q3_k_s", "q6_k"])
+    ap.add_argument("--mode", default="stream", choices=["stream", "batch"])
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="batch mode: lockstep batch size")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="stream mode: number of requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="stream mode: KV arena slots")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "back2back"])
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="poisson arrival rate, requests/s")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-seq", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--offload-policy", action="store_true",
+                    help="apply the Table-2 offload decision table to the "
+                         "transfer ledger (host-resident kernels move 0 B)")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="ledger models llama.cpp-style host sampling "
+                         "(full logit rows drained per step)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,30 +172,10 @@ def main() -> None:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_seq = args.max_seq or (args.prompt_len + args.gen)
-    engine = Engine.from_dense(model, params, args.quant, max_seq=max_seq)
-
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size, jnp.int32)
-    extras = {}
-    if cfg.family == "vlm":
-        extras["vision_embeds"] = jnp.zeros(
-            (args.batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
-    if cfg.family == "encdec":
-        extras["frames"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
-
-    out, stats = engine.generate(prompt, args.gen,
-                                 temperature=args.temperature,
-                                 extras=extras)
-    print(f"arch={cfg.name} quant={args.quant} "
-          f"[{args.prompt_len}:{args.gen}] batch={args.batch}")
-    print(f"  prefill {stats.prefill_s*1e3:.1f} ms | "
-          f"decode {stats.decode_s*1e3:.1f} ms "
-          f"({stats.decode_tok_per_s:.1f} tok/s/seq) | "
-          f"cache {stats.cache_bytes/1e6:.1f} MB")
-    print(f"  first generated tokens: {out[0, :8].tolist()}")
+    if args.mode == "stream":
+        run_stream(cfg, model, params, args)
+    else:
+        run_batch(cfg, model, params, args)
 
 
 if __name__ == "__main__":

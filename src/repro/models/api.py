@@ -45,6 +45,20 @@ class ModelAPI:
         return jax.tree.map(to_spec, shapes,
                             is_leaf=lambda x: isinstance(x, tuple))
 
+    def slot_decode_specs(self, num_slots: int, max_seq: int,
+                          dtype=jnp.bfloat16) -> Dict:
+        """Entry ShapeDtypeStructs for the serving engine's slot-batched
+        decode step: per-slot token/position/active vectors over a
+        (num_slots, max_seq) KV arena. Used for AOT lowering/warmup of the
+        continuous-batching step executor."""
+        i32 = jnp.int32
+        return {
+            "token": jax.ShapeDtypeStruct((num_slots, 1), i32),
+            "positions": jax.ShapeDtypeStruct((num_slots,), i32),
+            "active": jax.ShapeDtypeStruct((num_slots,), jnp.bool_),
+            "cache": self.cache_specs(num_slots, max_seq, dtype),
+        }
+
     def input_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16) -> Dict:
         """ShapeDtypeStruct stand-ins for the entry point of this cell."""
         cfg = self.cfg

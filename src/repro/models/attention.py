@@ -4,9 +4,10 @@ Prefill/train paths use memory-efficient chunked attention (pure-jnp online
 softmax — the XLA-lowered twin of the Pallas flash kernel, required for 32k
 sequences); decode paths attend one query against the KV cache.
 
-Decode steps take a *scalar* position (the serving engine decodes the whole
-batch in lockstep) so cache insertion is a ``dynamic_update_slice`` —
-a single-token write, not a full-cache rewrite.
+Decode steps take either a *scalar* position (lockstep batch: one
+``dynamic_update_slice`` per cache) or a *(B,)* position vector (the
+continuous-batching serving engine, where every KV-arena slot sits at its
+own depth: per-slot vmapped single-token writes + per-slot length masks).
 
 KV caches:
   GQA:  {"k": (B, S, Hkv, D), "v": (B, S, Hkv, D)}
@@ -90,10 +91,18 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(b, sq, h, dv)
 
 
+def position_vector(position, batch: int) -> jnp.ndarray:
+    """Normalize a decode position (scalar or (B,)) to a (B, 1) int array."""
+    p = jnp.asarray(position)
+    if p.ndim == 0:
+        return jnp.broadcast_to(p, (batch, 1))
+    return p.reshape(batch, 1)
+
+
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                      sm_scale: float, kv_len=None) -> jnp.ndarray:
     """Single-token decode: q (B, 1, H, D) vs cache k/v (B, S, Hkv, D).
-    ``kv_len``: scalar/array valid length for masking the padded tail.
+    ``kv_len``: scalar or (B,) valid length for masking the padded tail.
 
     With ``flags.mixed_intermediates()`` the KV cache is contracted in its
     stored bf16 dtype (f32 accumulation via preferred_element_type) — no
@@ -111,6 +120,9 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         sc = jnp.einsum("bhgd,bshd->bhgs", qg,
                         k.astype(jnp.float32)) * sm_scale
     if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim:                                  # per-slot lengths
+            kv_len = kv_len.reshape(b, 1, 1, 1)
         mask = jnp.arange(s)[None, None, None, :] < kv_len
         sc = jnp.where(mask, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
@@ -209,10 +221,18 @@ def gqa_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 def _insert_kv(cache_arr: jnp.ndarray, new: jnp.ndarray,
                position) -> jnp.ndarray:
-    """Write (B, 1, ...) ``new`` into (B, S, ...) cache at scalar position."""
-    start = (0, position) + (0,) * (cache_arr.ndim - 2)
-    return jax.lax.dynamic_update_slice(
-        cache_arr, new.astype(cache_arr.dtype), start)
+    """Write (B, 1, ...) ``new`` into (B, S, ...) cache at ``position`` —
+    a scalar (lockstep batch) or a (B,) vector (per-slot arena depths)."""
+    p = jnp.asarray(position)
+    new = new.astype(cache_arr.dtype)
+    if p.ndim == 0:
+        start = (0, p) + (0,) * (cache_arr.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache_arr, new, start)
+
+    def one(c, n, pi):                                   # c: (S, ...)
+        return jax.lax.dynamic_update_slice(
+            c, n, (pi,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache_arr, new, p)
 
 
 def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
@@ -226,7 +246,7 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     without inserting."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim()
-    pos2 = jnp.broadcast_to(position, (b, 1))
+    pos2 = position_vector(position, b)
     q, k, v = _project_qkv(p, cfg, x, pos2, fmt, impl, interpret,
                            mrope_positions)
     if cross:
@@ -335,7 +355,7 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     m = cfg.mla
     h = cfg.num_heads
     b = x.shape[0]
-    pos2 = jnp.broadcast_to(position, (b, 1))
+    pos2 = position_vector(position, b)
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
         p, cfg, x, pos2, fmt, impl, interpret)
     ckv = _insert_kv(cache["ckv"], ckv_new, position)
@@ -366,8 +386,10 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     sc = (s_nope + s_rope) * sm
     slen = ckv.shape[1]
-    sc = jnp.where(jnp.arange(slen)[None, None, :] < position + 1,
-                   sc, NEG_INF)
+    kv_len = jnp.asarray(position) + 1
+    if kv_len.ndim:                                      # per-slot lengths
+        kv_len = kv_len.reshape(b, 1, 1)
+    sc = jnp.where(jnp.arange(slen)[None, None, :] < kv_len, sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1)                    # (b, h, s)
     ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_f.dtype), ckv_f,
                      preferred_element_type=jnp.float32)  # (b, h, rank)

@@ -228,8 +228,9 @@ def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
     h = layers.embedding_lookup(params["embed"], token, recipe["embed"],
                                 jnp.bfloat16, width=cfg.d_model)
     pe = sinusoid_positions(cfg.max_seq_len, cfg.d_model)
-    h = h + jax.lax.dynamic_slice_in_dim(
-        pe, position, 1, axis=0)[None].astype(h.dtype)
+    # position: scalar or (B,) — gather handles both via a (B,) index.
+    pos_b = jnp.broadcast_to(jnp.asarray(position), (b,))
+    h = h + pe[pos_b][:, None].astype(h.dtype)
 
     def body(h, xs):
         lp, lc = xs

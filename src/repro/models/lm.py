@@ -368,7 +368,8 @@ def lm_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
 def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                    position, cache, *, quant="none", impl="ref",
                    interpret=True):
-    """token: (B, 1) int32; position: scalar int32; cache from prefill or
+    """token: (B, 1) int32; position: scalar int32 (lockstep batch) or
+    (B,) int32 (per-slot arena depths); cache from prefill or
     ``lm_cache_shapes``. Returns (logits (B, 1, V), new_cache)."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
@@ -381,8 +382,10 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
         # offset by the vision raster (matches _mrope_positions for idx >= V).
         v = cfg.vision_tokens
         side = max(int(v ** 0.5), 1)
-        eff = position - v + side
-        mrope_pos = jnp.broadcast_to(eff, (b, 1, 3))
+        eff = jnp.broadcast_to(jnp.asarray(position), (b,)) \
+            if jnp.ndim(position) == 0 else jnp.asarray(position)
+        eff = eff - v + side
+        mrope_pos = jnp.broadcast_to(eff[:, None, None], (b, 1, 3))
     new_caches = {}
     for name, count, subs in layer_groups(cfg):
         def body(h, xs, subs=subs):

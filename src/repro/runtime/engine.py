@@ -1,37 +1,55 @@
-"""Serving engine: the llama.cpp-analog execution loop (paper §III.A).
+"""Serving engine: continuous-batching execution over a slot-based KV arena.
 
-Hybrid execution model transplanted to TPU/JAX:
-  * prefill phase — parallel prompt processing (compute-bound, paper Fig. 15a)
-  * decode phase — sequential token generation against the KV cache
-    (memory/LOAD-bound, paper Fig. 15b)
-  * "host-side" ops (tokenization stand-in, sampling, cache management,
-    scheduling) run in the Python driver, exactly where llama.cpp keeps them.
+Layered runtime (paper §III.A transplanted to TPU/JAX, grown into a
+scheduler/executor/cache-manager stack):
 
-The engine accounts per-phase wall time + modeled bytes so the benchmark
-suite can report the paper's E2E metrics (latency, PDP, EDP) for arbitrary
-(model x quant x [in:out]) workloads.
+  * `runtime/request.py`   — request/sequence state machine
+  * `runtime/scheduler.py` — FCFS admission into free arena slots
+  * `runtime/kvcache.py`   — preallocated slot arena (cache manager)
+  * `runtime/transfers.py` — host<->device byte ledger (paper §V.A: data
+                             transfer, not kernels, is the bottleneck)
+  * this file              — the step executor: ONE jitted decode step
+                             over (params, token-batch, positions,
+                             active-mask, arena) with fused masked sampling
+
+Execution model per sequence: prefill runs the prompt's first L-1 tokens
+(bucketed to a power-of-two length so a handful of compilations cover every
+prompt), the last prompt token is held back and consumed by the decode
+step — so every sampled token, including the first, flows through the same
+jitted masked step, and admissions/completions never change a traced shape
+(no re-jit mid-flight). Pad-bucket cache garbage beyond L-1 is harmless:
+each arena position is rewritten by the decode step before its first use
+and masked until then.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import convert
 from repro.models.api import ModelAPI
-from repro.runtime import kvcache, sampling
+from repro.runtime import sampling
+from repro.runtime.kvcache import KVArena
+from repro.runtime.request import Request, SamplingParams, Sequence
+from repro.runtime.scheduler import Scheduler, SchedulerStats
+from repro.runtime.transfers import TransferLedger, TransferReport
 
 
 @dataclasses.dataclass
 class GenStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    tokens_in: int = 0
-    tokens_out: int = 0
+    tokens_in: int = 0              # prompt tokens per sequence
+    tokens_out: int = 0             # generated tokens per sequence
+    prefill_tokens: int = 0         # prompt tokens processed in prefill phase
+    decode_tokens: int = 0          # tokens emitted by decode steps
     cache_bytes: int = 0
+    transfers: Optional[TransferReport] = None
 
     @property
     def e2e_s(self) -> float:
@@ -39,27 +57,209 @@ class GenStats:
 
     @property
     def decode_tok_per_s(self) -> float:
-        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+        """Decode-phase throughput: only decode-emitted tokens over
+        decode-phase wall time (no prefill-derived token leaks in)."""
+        n = self.decode_tokens or self.tokens_out
+        return n / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def prefill_tok_per_s(self) -> float:
+        n = self.prefill_tokens or self.tokens_in
+        return n / self.prefill_s if self.prefill_s else 0.0
+
+
+@dataclasses.dataclass
+class ServeReport:
+    stats: GenStats                 # stats.transfers: frozen ledger view
+    sequences: List[Sequence]       # finished, submission order
+    sched: SchedulerStats
+    step_compiles: int              # decode-step compilations (1 == no re-jit)
+    ledger: Optional[TransferLedger] = None   # live ledger (summary_lines)
+
+    @property
+    def transfers(self) -> TransferReport:
+        return self.stats.transfers
+
+    def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[int, float]:
+        lats = [s.latency_s for s in self.sequences if s.latency_s is not None]
+        if not lats:
+            return {q: 0.0 for q in qs}
+        return {q: float(np.percentile(lats, q)) for q in qs}
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return self.stats.decode_tokens / self.stats.e2e_s \
+            if self.stats.e2e_s else 0.0
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (prefill length buckets: a handful of
+    compilations cover every prompt length)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServingEngine:
+    """Continuous-batching executor over a fixed-slot KV arena."""
+
+    def __init__(self, model: ModelAPI, params, *, quant: str = "none",
+                 num_slots: int = 4, max_seq: int = 2048, impl: str = "ref",
+                 top_k: int = 0, top_p: float = 1.0,
+                 offload_decisions: Optional[Dict[str, bool]] = None,
+                 host_sampling: bool = False, donate_cache: bool = True):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.model = model
+        self.params = params
+        self.quant = quant
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.impl = impl
+        self.top_k, self.top_p = top_k, top_p
+        self._ledger_kw = dict(decisions=offload_decisions,
+                               host_sampling=host_sampling)
+        self.arena = KVArena(model, num_slots, max_seq)
+        self.sched = Scheduler(num_slots, max_seq)
+        self._step_compiles = 0
+
+        kw = dict(quant=quant, impl=impl)
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, **kw))
+
+        def step(p, token, positions, active, arena, key, temps):
+            logits, arena = model.decode_step(p, token, positions, arena,
+                                              **kw)
+            nxt = sampling.sample_slots(logits[:, -1], key, temps, active,
+                                        top_k=top_k, top_p=top_p)
+            return nxt, arena
+        self._step = jax.jit(step,
+                             donate_argnums=(4,) if donate_cache else ())
+
+    # ------------------------------------------------------------------
+    def _admit_prefill(self, seq: Sequence, stats: GenStats,
+                       ledger: TransferLedger) -> None:
+        """Run the bucketed prefill for one admitted sequence and write its
+        cache into the arena slot."""
+        L = seq.req.prompt_len
+        pre_len = L - 1                       # last prompt token held back
+        P = min(_bucket(pre_len), self.max_seq)
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :pre_len] = seq.req.tokens[:pre_len]
+        batch = {"tokens": jnp.asarray(toks)}
+        if seq.req.extras:
+            batch.update(seq.req.extras)
+
+        t0 = time.perf_counter()
+        _, cache = self._prefill(self.params, batch)
+        self.arena.write_prefill(cache, seq.slot)
+        jax.block_until_ready(jax.tree.leaves(self.arena.buffers)[0])
+        stats.prefill_s += time.perf_counter() - t0
+        stats.prefill_tokens += pre_len
+        ledger.charge_prefill(P)
+        ledger.charge_cache_growth("prefill",
+                                   pre_len * self.arena.token_bytes())
+
+    def _decode_once(self, key, stats: GenStats, ledger: TransferLedger,
+                     t0: float) -> None:
+        """One masked decode step over every arena slot. Token timestamps
+        are read *after* the step's host sync so TTFT/latency include the
+        step (and any first-step compile) that produced each token."""
+        ns = self.num_slots
+        tokens = np.zeros((ns, 1), np.int32)
+        positions = np.zeros((ns,), np.int32)
+        active = np.zeros((ns,), bool)
+        temps = np.zeros((ns,), np.float32)
+        for slot, seq in self.sched.active.items():
+            tokens[slot, 0] = seq.next_token
+            positions[slot] = seq.position
+            active[slot] = True
+            temps[slot] = seq.req.sampling.temperature
+
+        t_step = time.perf_counter()
+        before = self._jit_cache_size()
+        nxt, self.arena.buffers = self._step(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(active), self.arena.buffers, key,
+            jnp.asarray(temps))
+        nxt_host = np.asarray(nxt)            # blocks until step completes
+        t_end = time.perf_counter()
+        stats.decode_s += t_end - t_step
+        now = t_end - t0
+        self._step_compiles += self._jit_cache_size() - before
+
+        for slot, seq in list(self.sched.active.items()):
+            ledger.charge_decode_step(int(positions[slot]) + 1)
+            ledger.charge_cache_growth("decode", self.arena.token_bytes())
+            seq.record_token(int(nxt_host[slot]), now)
+            stats.decode_tokens += 1
+        self.sched.record_step()
+        self.sched.retire(self.arena.free)
+
+    def _jit_cache_size(self) -> int:
+        size = getattr(self._step, "_cache_size", None)
+        return size() if callable(size) else 0
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request], *, seed: int = 0,
+              realtime: bool = True) -> ServeReport:
+        """Run a request stream to completion. ``realtime``: honor
+        ``arrival_s`` offsets against the wall clock (sleep while idle);
+        False replays arrivals against the virtual step clock only."""
+        for r in requests:
+            self.sched.submit(r)
+        stats = GenStats()
+        ledger = TransferLedger(self.model.cfg, self.quant,
+                                **self._ledger_kw)
+        key = jax.random.PRNGKey(seed)
+        t0 = time.perf_counter()
+
+        while self.sched.has_work:
+            now = time.perf_counter() - t0
+            admitted = self.sched.admit(self.arena.alloc, now)
+            for seq in admitted:
+                self._admit_prefill(seq, stats, ledger)
+                seq.start_decode()
+            if not self.sched.active:
+                nxt = self.sched.next_arrival()
+                if nxt is None:
+                    break               # queued-but-no-slot cannot happen here
+                if realtime:
+                    time.sleep(min(max(nxt - now, 0.0), 0.05))
+                else:
+                    self.sched.poll_arrivals(float("inf"))
+                continue
+            key, sub = jax.random.split(key)
+            self._decode_once(sub, stats, ledger, t0)
+
+        stats.cache_bytes = self.arena.nbytes()
+        stats.tokens_in = sum(r.prompt_len for r in requests)
+        stats.tokens_out = sum(s.tokens_out for s in self.sched.finished)
+        stats.transfers = TransferReport.from_ledger(ledger)
+        order = {r.rid: i for i, r in enumerate(requests)}
+        seqs = sorted(self.sched.finished, key=lambda s: order[s.rid])
+        return ServeReport(stats=stats, sequences=seqs,
+                           sched=self.sched.stats,
+                           step_compiles=self._step_compiles, ledger=ledger)
 
 
 class Engine:
-    """Batched generation over a fixed-size KV arena."""
+    """Thin fixed-batch compatibility wrapper over ``ServingEngine``.
+
+    ``generate(tokens, n)`` submits one request per batch row (identical
+    lengths, simultaneous arrival) and reassembles a dense (B, n) output —
+    the legacy lockstep interface, now running on the slot arena."""
 
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  max_seq: int = 2048, impl: str = "ref",
                  donate_cache: bool = True):
         self.model = model
+        self.params = params
         self.quant = quant
         self.max_seq = max_seq
         self.impl = impl
-        # Quantize on ingest if params are dense and a recipe is requested.
-        self.params = params
-        kw = dict(quant=quant, impl=impl)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, **kw))
-        self._decode = jax.jit(
-            lambda p, t, pos, c: model.decode_step(p, t, pos, c, **kw),
-            donate_argnums=(3,) if donate_cache else ())
+        self.donate_cache = donate_cache
+        self._engines: Dict = {}    # (batch, top_k, top_p) -> ServingEngine
 
     @classmethod
     def from_dense(cls, model: ModelAPI, dense_params, quant: str,
@@ -69,6 +269,29 @@ class Engine:
             if quant != "none" else dense_params
         return cls(model, qparams, quant=quant, **kw)
 
+    def _engine_for(self, batch: int, top_k: int,
+                    top_p: float) -> ServingEngine:
+        key = (batch, top_k, top_p)
+        if key not in self._engines:
+            self._engines[key] = ServingEngine(
+                self.model, self.params, quant=self.quant,
+                num_slots=batch, max_seq=self.max_seq, impl=self.impl,
+                top_k=top_k, top_p=top_p, donate_cache=self.donate_cache)
+        else:
+            # fresh arena/scheduler, warm jit caches
+            eng = self._engines[key]
+            eng.arena = KVArena(self.model, batch, self.max_seq)
+            eng.sched = Scheduler(batch, self.max_seq)
+        return self._engines[key]
+
+    @staticmethod
+    def _release(eng: ServingEngine) -> None:
+        """Drop the arena's device buffers and the run's sequence registry
+        between generate() calls — only the warm jit caches are worth
+        keeping alive (a full-size arena is GBs of device memory)."""
+        eng.arena = None
+        eng.sched = None
+
     def generate(self, tokens: jnp.ndarray, max_new_tokens: int, *,
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 1.0, seed: int = 0,
@@ -76,38 +299,25 @@ class Engine:
         """tokens: (B, S_prompt) int32. Returns (out_tokens (B, T), stats)."""
         b, s_prompt = tokens.shape
         assert s_prompt + max_new_tokens <= self.max_seq, "KV arena too small"
-        key = jax.random.PRNGKey(seed)
-        batch = {"tokens": tokens}
-        if extras:
-            batch.update(extras)
-
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch)
-        cache = kvcache.pad_prefill_cache(self.model, cache, b, self.max_seq)
-        logits = jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
-
-        stats = GenStats(tokens_in=s_prompt,
-                         cache_bytes=kvcache.cache_nbytes(cache))
-        outs = []
-        key, sub = jax.random.split(key)
-        next_tok = sampling.sample(logits[:, -1], sub,
-                                   temperature=temperature, top_k=top_k,
-                                   top_p=top_p)
-        outs.append(next_tok)
-
-        t1 = time.perf_counter()
-        for step in range(max_new_tokens - 1):
-            pos = jnp.int32(s_prompt + step)
-            logits, cache = self._decode(self.params, next_tok[:, None],
-                                         pos, cache)
-            key, sub = jax.random.split(key)
-            next_tok = sampling.sample(logits[:, -1], sub,
-                                       temperature=temperature, top_k=top_k,
-                                       top_p=top_p)
-            outs.append(next_tok)
-        jax.block_until_ready(next_tok)
-        stats.prefill_s = t_prefill
-        stats.decode_s = time.perf_counter() - t1
-        stats.tokens_out = len(outs)
-        return jnp.stack(outs, axis=1), stats
+        eng = self._engine_for(b, top_k, top_p)
+        samp = SamplingParams(temperature=temperature, top_k=top_k,
+                              top_p=top_p, seed=seed)
+        toks_np = np.asarray(tokens)
+        reqs = []
+        for i in range(b):
+            ex = {k: v[i:i + 1] for k, v in extras.items()} if extras else None
+            reqs.append(Request(rid=i, tokens=toks_np[i],
+                                max_new_tokens=max_new_tokens,
+                                sampling=samp, extras=ex))
+        try:
+            report = eng.serve(reqs, seed=seed, realtime=False)
+        finally:
+            self._release(eng)
+        out = jnp.asarray(
+            np.stack([np.asarray(s.generated, np.int32)
+                      for s in report.sequences]))
+        stats = report.stats
+        # Legacy per-sequence semantics for the fixed-batch interface.
+        stats.tokens_in = s_prompt
+        stats.tokens_out = max_new_tokens
+        return out, stats

@@ -2,12 +2,17 @@
 
 Contiguous pre-allocated caches (paper-faithful: llama.cpp uses a
 contiguous KV arena managed by the host, Fig. 4 keeps "KV cache management"
-on the host side). Paged attention is an orthogonal extension noted in
+on the host side), organized as a **slot-based arena**: one preallocated
+cache pytree sized (num_slots, max_seq), where each slot hosts one live
+sequence. Finished sequences free their slot mid-flight and a queued
+request takes it over without any reallocation or re-jit — the continuous
+batching substrate. Paged attention is an orthogonal extension noted in
 DESIGN.md future work.
 """
 from __future__ import annotations
 
-from typing import Dict
+import functools
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +22,7 @@ from repro.models.api import ModelAPI
 
 def allocate(model: ModelAPI, batch: int, max_seq: int,
              dtype=jnp.bfloat16):
-    """Zero-filled cache pytree sized for ``max_seq``."""
+    """Zero-filled cache pytree sized for ``max_seq`` (the arena storage)."""
     shapes = model.cache_shapes(batch, max_seq)
 
     def mk(x):
@@ -25,19 +30,72 @@ def allocate(model: ModelAPI, batch: int, max_seq: int,
     return jax.tree.map(mk, shapes, is_leaf=lambda x: isinstance(x, tuple))
 
 
-def pad_prefill_cache(model: ModelAPI, cache, batch: int, max_seq: int):
-    """Pad a prefill-produced cache (seq = prompt length) out to max_seq."""
-    shapes = model.cache_shapes(batch, max_seq)
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_insert(arena, prefill_cache, slot):
+    """Write a B=1 prefill cache into arena slot ``slot`` (traced scalar, so
+    every slot shares one compilation per prefill-cache shape). Leaves are
+    (L, B, S, ...): insert at (0, slot, 0, ...) — one in-place
+    dynamic_update_slice per leaf, no fresh padded copy."""
+    def w(a, c):
+        start = (0, slot) + (0,) * (a.ndim - 2)
+        return jax.lax.dynamic_update_slice(a, c.astype(a.dtype), start)
+    return jax.tree.map(w, arena, prefill_cache)
 
-    def pad(c, target):
-        if not isinstance(target, tuple):
-            return c
-        pads = [(0, t - s) for s, t in zip(c.shape, target)]
-        if all(p == (0, 0) for p in pads):
-            return c
-        return jnp.pad(c, pads)
-    return jax.tree.map(pad, cache, shapes,
-                        is_leaf=lambda x: isinstance(x, tuple))
+
+class KVArena:
+    """Fixed-size slot arena over the model's cache pytree.
+
+    The arena owns the storage and the free list; the scheduler decides
+    which request gets a freed slot. All decode steps run over the full
+    (num_slots, ...) buffers with per-slot position/active masks, so slot
+    turnover never changes a traced shape.
+    """
+
+    def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
+                 dtype=jnp.bfloat16):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self.buffers = allocate(model, num_slots, max_seq, dtype)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+
+    # -- slot lifecycle -------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_slots(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (lowest index first) or None when full."""
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        if slot in self._free or not (0 <= slot < self.num_slots):
+            raise ValueError(f"bad slot free: {slot}")
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    # -- storage --------------------------------------------------------
+    def write_prefill(self, prefill_cache, slot: int) -> None:
+        """Insert a B=1 prefill cache (seq <= max_seq) into ``slot``."""
+        self.buffers = _arena_insert(self.buffers, prefill_cache,
+                                     jnp.int32(slot))
+
+    def nbytes(self) -> int:
+        return cache_nbytes(self.buffers)
+
+    def slot_bytes(self) -> float:
+        """Bytes of arena backing one slot."""
+        return self.nbytes() / self.num_slots
+
+    def token_bytes(self) -> float:
+        """Approximate cache bytes appended per generated token (exact for
+        pure seq-indexed KV; SSM constant-size states amortized)."""
+        return self.slot_bytes() / self.max_seq
 
 
 def cache_nbytes(cache) -> int:

@@ -1,0 +1,128 @@
+"""Request/sequence abstractions for the continuous-batching runtime.
+
+A ``Request`` is what a client submits: prompt tokens, sampling params, a
+generation budget, and an arrival time (for request-stream replay). The
+scheduler wraps it in a ``Sequence`` — the engine-side state machine
+
+    QUEUED -> PREFILL -> DECODE -> DONE
+
+where PREFILL covers the prompt's first L-1 tokens (batched, padded to a
+bucket) and DECODE consumes one token per engine step starting with the
+held-back last prompt token, so *every* sampled token flows through the
+jitted masked decode step (no host-side prefill sampling special case).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class SeqState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0        # 0 -> greedy
+    top_k: int = 0                  # 0 -> no top-k filter
+    top_p: float = 1.0              # 1 -> no nucleus filter
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # (L,) int prompt, L >= 2
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival_s: float = 0.0          # offset from stream start
+    extras: Optional[Dict] = None   # vlm vision_embeds / encdec frames (1, ...)
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if len(self.tokens) < 2:
+            raise ValueError("continuous-batching runtime needs prompts of "
+                             ">= 2 tokens (last prompt token is decoded)")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclasses.dataclass
+class Sequence:
+    """Engine-side state of one request."""
+    req: Request
+    state: SeqState = SeqState.QUEUED
+    slot: Optional[int] = None
+    position: int = 0               # next cache index the decode step writes
+    next_token: int = 0             # input token for the next decode step
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # timing (stream-relative seconds)
+    t_admitted: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def done(self) -> bool:
+        return self.state is SeqState.DONE
+
+    @property
+    def tokens_out(self) -> int:
+        return len(self.generated)
+
+    def admit(self, slot: int, now: float) -> None:
+        assert self.state is SeqState.QUEUED
+        self.state = SeqState.PREFILL
+        self.slot = slot
+        self.t_admitted = now
+        # Prefill covers tokens [0, L-1); the decode loop consumes token L-1.
+        self.position = self.req.prompt_len - 1
+        self.next_token = int(self.req.tokens[-1])
+
+    def start_decode(self) -> None:
+        assert self.state is SeqState.PREFILL
+        self.state = SeqState.DECODE
+
+    def record_token(self, token: int, now: float) -> None:
+        assert self.state is SeqState.DECODE
+        if self.t_first_token is None:
+            self.t_first_token = now
+        self.generated.append(int(token))
+        self.position += 1
+        self.next_token = int(token)
+        if self.tokens_out >= self.req.max_new_tokens:
+            self.state = SeqState.DONE
+            self.t_done = now
+
+    # -- per-request report ---------------------------------------------
+    @property
+    def _t_arrival_eff(self) -> float:
+        """Arrival reference. Under realtime replay admission follows
+        arrival, so this is arrival_s; under virtual replay (arrivals
+        fast-forwarded) admission may precede the nominal arrival — clamp
+        so latencies measure service time, never go negative."""
+        return min(self.req.arrival_s, self.t_admitted)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token, from request arrival."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self._t_arrival_eff
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self._t_arrival_eff

@@ -1,17 +1,19 @@
 """Token sampling (paper-faithful: the final softmax/sampling stays
-"host-side" — plain JAX ops, never offloaded/quantized)."""
+"host-side" — plain JAX ops, never offloaded/quantized).
+
+``sample``       — single sampling config for a lockstep batch (legacy path).
+``sample_slots`` — the fused masked sampler the continuous-batching engine
+                   jits into its decode step: per-slot temperature vector +
+                   active mask over the fixed slot axis.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
-           top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32 tokens. temperature=0 -> greedy."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lf = logits.astype(jnp.float32) / temperature
+def _filter_top_k_top_p(lf: jnp.ndarray, top_k: int,
+                        top_p: float) -> jnp.ndarray:
     if top_k > 0:
         kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < kth, -1e30, lf)
@@ -23,4 +25,32 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
         cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx, axis=-1)
         lf = jnp.where(lf < cutoff, -1e30, lf)
+    return lf
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+           top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32 tokens. temperature=0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = _filter_top_k_top_p(logits.astype(jnp.float32) / temperature,
+                             top_k, top_p)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(logits: jnp.ndarray, key, temperature: jnp.ndarray,
+                 active: jnp.ndarray, *, top_k: int = 0,
+                 top_p: float = 1.0) -> jnp.ndarray:
+    """Fused per-slot sampling for the serving decode step.
+
+    logits: (B, V); temperature: (B,) — 0 selects greedy per slot;
+    active: (B,) bool — inactive slots emit token 0. top_k/top_p are
+    trace-time constants (engine-level policy). Fully jittable: both the
+    greedy and stochastic branches are computed and selected per slot.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    lf = _filter_top_k_top_p(logits.astype(jnp.float32) / t, top_k, top_p)
+    stochastic = jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+    tok = jnp.where(temperature > 0.0, stochastic, greedy)
+    return jnp.where(active, tok, 0)

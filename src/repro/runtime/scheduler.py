@@ -1,0 +1,106 @@
+"""Admission + batching policy for the continuous-batching engine.
+
+FCFS over arrived requests, packing into whatever KV-arena slots are free.
+The scheduler owns the queue and the sequence registry; the arena owns the
+storage; the engine step executor only ever sees (token, position, active)
+vectors over the fixed slot axis — so admissions and completions never
+change a traced shape.
+
+Admission gates:
+  * arrival time — a request joins the queue only once its ``arrival_s``
+    has passed (request-stream replay);
+  * slot availability — one free arena slot per admitted request;
+  * sequence budget — prompt_len + max_new_tokens must fit max_seq.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.runtime.request import Request, SeqState, Sequence
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    admitted: int = 0
+    completed: int = 0
+    slot_reuses: int = 0            # admissions into a previously used slot
+    occupancy_sum: float = 0.0      # sum over steps of active-slot count
+    steps: int = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+
+class Scheduler:
+    def __init__(self, num_slots: int, max_seq: int):
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.pending: Deque[Sequence] = deque()     # submitted, not arrived
+        self.queue: Deque[Sequence] = deque()       # arrived, waiting on slot
+        self.active: Dict[int, Sequence] = {}       # slot -> sequence
+        self.finished: List[Sequence] = []
+        self._ever_used: set = set()
+        self.stats = SchedulerStats()
+
+    # -- submission ------------------------------------------------------
+    def submit(self, req: Request) -> Sequence:
+        budget = req.prompt_len + req.max_new_tokens
+        if budget > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds arena max_seq {self.max_seq}")
+        seq = Sequence(req)
+        self.pending.append(seq)
+        return seq
+
+    # -- admission -------------------------------------------------------
+    def poll_arrivals(self, now: float) -> None:
+        """Move requests whose arrival time has passed into the run queue
+        (submission order == arrival order for our generators)."""
+        while self.pending and self.pending[0].req.arrival_s <= now:
+            self.queue.append(self.pending.popleft())
+
+    def admit(self, slot_alloc, now: float) -> List[Sequence]:
+        """Admit queued sequences while ``slot_alloc()`` yields free slots.
+        Returns the newly admitted sequences (state PREFILL, slot set)."""
+        self.poll_arrivals(now)
+        admitted: List[Sequence] = []
+        while self.queue:
+            slot = slot_alloc()
+            if slot is None:
+                break
+            seq = self.queue.popleft()
+            seq.admit(slot, now)
+            self.active[slot] = seq
+            if slot in self._ever_used:
+                self.stats.slot_reuses += 1
+            self._ever_used.add(slot)
+            self.stats.admitted += 1
+            admitted.append(seq)
+        return admitted
+
+    # -- step bookkeeping -------------------------------------------------
+    def record_step(self) -> None:
+        self.stats.steps += 1
+        self.stats.occupancy_sum += len(self.active)
+
+    def retire(self, slot_free) -> List[Sequence]:
+        """Collect DONE sequences, freeing their slots via ``slot_free``."""
+        done = [s for s in self.active.values() if s.done]
+        for seq in done:
+            del self.active[seq.slot]
+            slot_free(seq.slot)
+            self.finished.append(seq)
+            self.stats.completed += 1
+        return done
+
+    # -- state queries ----------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.queue or self.active)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.pending[0].req.arrival_s if self.pending else None

@@ -1,0 +1,162 @@
+"""Host<->accelerator transfer ledger for the live serving runtime.
+
+The paper's system-level finding (§V.A, Table 2) is that data transfer —
+not kernel throughput — bounds LLM inference on the CGLA. The offline
+analytical model (`core/offload.py`) always knew this; the live engine
+never accounted a byte. This ledger charges every host<->device movement
+of a generation to a (phase, category, direction) cell:
+
+  phase      prefill | decode            (paper Fig. 15a vs 15b)
+  category   tokens  — prompt/feedback token ids, h2d
+             weights — offloaded kernel weight staging (DMA LOAD); for the
+                       fp16 attention calls this *is* the KV cache stream
+             acts    — activation staging for offloaded kernels, h2d
+             outs    — kernel result drain, d2h
+             sampled — sampled token ids, d2h (fused device sampling), or
+             logits  — full logit rows, d2h (llama.cpp-style host sampling)
+             kv_arena— device-resident cache growth (informational; not a
+                       host<->device transfer)
+  direction  h2d | d2h | dev
+
+Kernel-byte math comes from `core/offload.py`'s ``KernelCall`` accounting
+(`phase_transfer_bytes`), optionally filtered by an ``OffloadPolicy``
+decision table so host-resident kernels charge nothing — the live analog
+of Table 2's per-format offload ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.coalesce import TransferModel
+from repro.core.offload import phase_transfer_bytes
+from repro.core.quant.formats import RECIPES
+
+H2D = "h2d"
+D2H = "d2h"
+DEV = "dev"
+PHASES = ("prefill", "decode")
+
+
+class TransferLedger:
+    """Accumulates per-phase host<->device bytes for one serving run."""
+
+    def __init__(self, cfg: ModelConfig, quant: str, *,
+                 decisions: Optional[Dict[str, bool]] = None,
+                 host_sampling: bool = False):
+        self.cfg = cfg
+        # Dense bf16 serving ("none") is accounted at 16-bit weight width —
+        # the KernelCall tables only know the llama.cpp transfer formats.
+        self.quant = quant if quant in RECIPES else "fp16"
+        self.decisions = decisions
+        self.host_sampling = host_sampling
+        # {phase: {category: {direction: bytes}}}
+        self._cells: Dict[str, Dict[str, Dict[str, float]]] = {}
+        self.tokens: Dict[str, int] = {p: 0 for p in PHASES}
+
+    # -- raw charge ------------------------------------------------------
+    def charge(self, phase: str, category: str, direction: str,
+               nbytes: float) -> None:
+        by_cat = self._cells.setdefault(phase, {})
+        by_dir = by_cat.setdefault(category, {})
+        by_dir[direction] = by_dir.get(direction, 0.0) + float(nbytes)
+
+    # -- phase-level charges ---------------------------------------------
+    def charge_prefill(self, seq: int, batch: int = 1) -> None:
+        """One prompt prefill of ``seq`` tokens (post-bucketing length)."""
+        self.charge("prefill", "tokens", H2D, batch * seq * 4)
+        kb = phase_transfer_bytes(self.cfg, self.quant, seq, batch,
+                                  decode=False, decisions=self.decisions)
+        self.charge("prefill", "weights", H2D, kb["weights"])
+        self.charge("prefill", "acts", H2D, kb["acts"])
+        self.charge("prefill", "outs", D2H, kb["outs"])
+        self.tokens["prefill"] += batch * seq
+
+    def charge_decode_step(self, kv_len: int, batch: int = 1) -> None:
+        """One decode step for ``batch`` sequences at KV depth ``kv_len``."""
+        self.charge("decode", "tokens", H2D, batch * 4)
+        kb = phase_transfer_bytes(self.cfg, self.quant, kv_len, batch,
+                                  decode=True, decisions=self.decisions)
+        self.charge("decode", "weights", H2D, kb["weights"])
+        self.charge("decode", "acts", H2D, kb["acts"])
+        self.charge("decode", "outs", D2H, kb["outs"])
+        if self.host_sampling:
+            self.charge("decode", "logits", D2H,
+                        batch * self.cfg.vocab_size * 4)
+        else:
+            self.charge("decode", "sampled", D2H, batch * 4)
+        self.tokens["decode"] += batch
+
+    def charge_cache_growth(self, phase: str, nbytes: float) -> None:
+        self.charge(phase, "kv_arena", DEV, nbytes)
+
+    # -- views -----------------------------------------------------------
+    def breakdown(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        return {p: {c: dict(d) for c, d in cats.items()}
+                for p, cats in self._cells.items()}
+
+    def phase_bytes(self, phase: str) -> Dict[str, float]:
+        """{h2d, d2h} totals for a phase (device-resident cells excluded)."""
+        out = {H2D: 0.0, D2H: 0.0}
+        for by_dir in self._cells.get(phase, {}).values():
+            for d, b in by_dir.items():
+                if d in out:
+                    out[d] += b
+        return out
+
+    def total(self, direction: str) -> float:
+        return sum(self.phase_bytes(p)[direction] for p in self._cells)
+
+    def bytes_per_token(self) -> float:
+        """Transferred bytes (both directions) per generated token."""
+        n = max(self.tokens["decode"], 1)
+        return (self.total(H2D) + self.total(D2H)) / n
+
+    def load_seconds(self, tm: Optional[TransferModel] = None,
+                     coalesced: bool = True) -> Dict[str, float]:
+        """Modeled DMA time per phase (Fig. 15 LOAD/DRAIN analog), using
+        the calibrated coalescing transfer model."""
+        tm = tm or TransferModel()
+        out = {}
+        for p in self._cells:
+            pb = self.phase_bytes(p)
+            out[p] = tm.load_time([pb[H2D]], coalesced) \
+                + tm.drain_time(pb[D2H], coalesced)
+        return out
+
+    def summary_lines(self, exec_s: Optional[Dict[str, float]] = None):
+        """Fig. 15-style LOAD vs EXEC lines; ``exec_s``: measured wall time
+        per phase from GenStats."""
+        lines = []
+        load = self.load_seconds()
+        for p in PHASES:
+            if p not in self._cells:
+                continue
+            pb = self.phase_bytes(p)
+            line = (f"{p:7s} h2d {pb[H2D]/1e6:10.2f} MB | "
+                    f"d2h {pb[D2H]/1e6:8.3f} MB | "
+                    f"modeled LOAD {load[p]*1e3:8.2f} ms")
+            if exec_s and exec_s.get(p):
+                e = exec_s[p]
+                frac = load[p] / (load[p] + e)
+                line += f" | measured EXEC {e*1e3:8.2f} ms" \
+                        f" | LOAD share {frac*100:5.1f}%"
+            lines.append(line)
+        lines.append(f"bytes/generated-token: {self.bytes_per_token()/1e6:.3f} MB")
+        return lines
+
+
+@dataclasses.dataclass
+class TransferReport:
+    """Frozen ledger view attached to GenStats."""
+    breakdown: Dict[str, Dict[str, Dict[str, float]]]
+    phase_totals: Dict[str, Dict[str, float]]
+    bytes_per_token: float
+
+    @classmethod
+    def from_ledger(cls, ledger: TransferLedger) -> "TransferReport":
+        return cls(breakdown=ledger.breakdown(),
+                   phase_totals={p: ledger.phase_bytes(p)
+                                 for p in ledger.breakdown()},
+                   bytes_per_token=ledger.bytes_per_token())

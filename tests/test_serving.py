@@ -1,0 +1,187 @@
+"""Continuous-batching runtime tests: slot arena lifecycle, mid-flight slot
+reuse without re-jit, masked-sampling equivalence with the single-request
+path, and transfer-ledger byte totals cross-checked against the offline
+offload accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.core.offload import phase_transfer_bytes
+from repro.models.api import build_model
+from repro.runtime import sampling
+from repro.runtime.engine import Engine, ServingEngine
+from repro.runtime.kvcache import KVArena
+from repro.runtime.request import Request, SamplingParams
+from repro.runtime.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_requests(cfg, n, gen, seed=0, lo=4, hi=12, **kw):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, tokens=rng.randint(0, cfg.vocab_size,
+                                              int(rng.randint(lo, hi))),
+                    max_new_tokens=gen, **kw) for i in range(n)]
+
+
+# ----------------------------------------------------------------------
+# KV arena
+# ----------------------------------------------------------------------
+def test_arena_slot_lifecycle(served_model):
+    cfg, model, params = served_model
+    arena = KVArena(model, num_slots=3, max_seq=16)
+    assert arena.free_slots == 3
+    slots = [arena.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2] and arena.alloc() is None
+    arena.free(1)
+    assert arena.free_slots == 1 and arena.alloc() == 1
+    with pytest.raises(ValueError):
+        arena.free(7)
+    # prefill write lands in the right slot and only that slot
+    _, cache = model.prefill(params, {"tokens": jnp.ones((1, 8), jnp.int32)})
+    before = jax.tree.leaves(arena.buffers)[0].copy()
+    arena.write_prefill(cache, 2)
+    leaf = jax.tree.leaves(arena.buffers)[0]          # (L, slots, S, H, D)
+    assert leaf.shape[1] == 3 and leaf.shape[2] == 16
+    assert not bool(jnp.array_equal(leaf[:, 2, :8], before[:, 2, :8]))
+    assert bool(jnp.array_equal(leaf[:, 0], before[:, 0]))
+
+
+def test_scheduler_arrival_gating_and_budget():
+    sched = Scheduler(num_slots=2, max_seq=16)
+    with pytest.raises(ValueError):        # prompt + gen > max_seq
+        sched.submit(Request(rid=9, tokens=np.arange(10),
+                             max_new_tokens=10))
+    for i, arr in enumerate([0.0, 0.0, 5.0]):
+        sched.submit(Request(rid=i, tokens=np.arange(4),
+                             max_new_tokens=2, arrival_s=arr))
+    free = [1, 0]
+    admitted = sched.admit(lambda: free.pop() if free else None, now=0.0)
+    # rid 2 has not arrived; rids 0/1 take both slots
+    assert [s.rid for s in admitted] == [0, 1]
+    assert sched.admit(lambda: None, now=10.0) == []   # arrived, but no slot
+    assert [s.rid for s in sched.queue] == [2]
+
+
+# ----------------------------------------------------------------------
+# fused masked sampling
+# ----------------------------------------------------------------------
+def test_sample_slots_masking_and_per_slot_temperature(rng):
+    logits = jax.random.normal(rng, (4, 64))
+    active = jnp.array([True, True, False, True])
+    temps = jnp.array([0.0, 0.7, 0.0, 0.0])
+    out = sampling.sample_slots(logits, rng, temps, active, top_k=8)
+    greedy = jnp.argmax(logits, axis=-1)
+    assert out.shape == (4,)
+    assert int(out[0]) == int(greedy[0])       # temp 0 -> greedy
+    assert int(out[3]) == int(greedy[3])
+    assert int(out[2]) == 0                    # inactive -> pad token
+    # stochastic slot respects the top-k filter
+    topk = set(np.asarray(jax.lax.top_k(logits[1], 8)[1]).tolist())
+    assert int(out[1]) in topk
+
+
+# ----------------------------------------------------------------------
+# continuous batching
+# ----------------------------------------------------------------------
+def test_stream_slot_reuse_without_rejit(served_model):
+    cfg, model, params = served_model
+    engine = ServingEngine(model, params, num_slots=2, max_seq=24)
+    reqs = make_requests(cfg, 5, gen=4)
+    report = engine.serve(reqs, seed=0)
+    assert report.sched.completed == 5
+    # only 2 slots for 5 requests: at least 3 admissions reuse a freed slot
+    assert report.sched.slot_reuses >= 3
+    # admissions after completions never recompiled the decode step
+    assert report.step_compiles <= 1
+    for seq, req in zip(report.sequences, reqs):
+        assert seq.rid == req.rid and seq.tokens_out == 4
+        assert seq.latency_s is not None and seq.ttft_s is not None
+    # transfer breakdown present for both phases
+    assert set(report.transfers.phase_totals) == {"prefill", "decode"}
+    assert report.transfers.bytes_per_token > 0
+
+
+def test_masked_batch_matches_single_request_path(served_model):
+    """Greedy decode of a request inside a mixed-occupancy masked batch must
+    equal the same request served alone through the lockstep wrapper."""
+    cfg, model, params = served_model
+    reqs = make_requests(cfg, 3, gen=5, seed=1, lo=5, hi=11)
+    engine = ServingEngine(model, params, num_slots=3, max_seq=24)
+    report = engine.serve(reqs, seed=0)
+    single = Engine(model, params, max_seq=24)
+    for seq, req in zip(report.sequences, reqs):
+        out, _ = single.generate(jnp.asarray(req.tokens)[None], 5)
+        np.testing.assert_array_equal(
+            np.asarray(seq.generated), np.asarray(out[0]),
+            err_msg=f"request {req.rid} diverged in the masked batch")
+
+
+def test_engine_generate_stochastic_shapes(served_model):
+    cfg, model, params = served_model
+    engine = Engine(model, params, max_seq=24)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                cfg.vocab_size)
+    out, stats = engine.generate(prompt, 6, temperature=0.8, top_k=16,
+                                 seed=7)
+    assert out.shape == (2, 6)
+    assert stats.tokens_out == 6 and stats.decode_tokens == 12
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab_size))
+
+
+# ----------------------------------------------------------------------
+# transfer ledger vs offline offload accounting
+# ----------------------------------------------------------------------
+def test_ledger_matches_offload_accounting(served_model):
+    """Acceptance check: live ledger totals within 5% of core/offload.py's
+    KernelCall byte accounting for one [9:4] q8_0 workload (prefill bucket
+    8 == prompt_len-1, so the analytic replay is shape-exact)."""
+    cfg, model, params = served_model
+    L, GEN = 9, 4
+    rng = np.random.RandomState(5)
+    req = Request(rid=0, tokens=rng.randint(0, cfg.vocab_size, L),
+                  max_new_tokens=GEN)
+    engine = ServingEngine(model, params, quant="none", num_slots=1,
+                           max_seq=16)
+    report = engine.serve([req], seed=0)
+
+    pre = phase_transfer_bytes(cfg, "fp16", L - 1, batch=1, decode=False)
+    exp_h2d = pre["weights"] + pre["acts"] + (L - 1) * 4
+    exp_d2h = pre["outs"]
+    got = report.transfers.phase_totals["prefill"]
+    assert abs(got["h2d"] - exp_h2d) / exp_h2d < 0.05
+    assert abs(got["d2h"] - exp_d2h) / exp_d2h < 0.05
+
+    exp_h2d = exp_d2h = 0.0
+    for i in range(GEN):
+        dec = phase_transfer_bytes(cfg, "fp16", L + i, batch=1, decode=True)
+        exp_h2d += dec["weights"] + dec["acts"] + 4
+        exp_d2h += dec["outs"] + 4                 # + sampled token id
+    got = report.transfers.phase_totals["decode"]
+    assert abs(got["h2d"] - exp_h2d) / exp_h2d < 0.05
+    assert abs(got["d2h"] - exp_d2h) / exp_d2h < 0.05
+
+
+def test_genstats_phase_token_accounting(served_model):
+    """The decode-timing skew fix: every generated token is a decode-phase
+    token (the held-back last prompt token is decoded, not prefilled), and
+    prefill counts exactly the L-1 prefilled prompt tokens."""
+    cfg, model, params = served_model
+    engine = ServingEngine(model, params, num_slots=1, max_seq=16)
+    req = Request(rid=0, tokens=np.arange(7) % cfg.vocab_size,
+                  max_new_tokens=5)
+    report = engine.serve([req], seed=0)
+    st = report.stats
+    assert st.prefill_tokens == 6          # L-1
+    assert st.decode_tokens == 5 == st.tokens_out
+    assert st.tokens_in == 7
+    assert st.decode_s > 0 and st.prefill_s > 0
+    assert st.decode_tok_per_s == pytest.approx(5 / st.decode_s)
