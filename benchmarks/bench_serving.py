@@ -1,11 +1,22 @@
-"""Continuous-batching serving benchmark: throughput vs batch occupancy.
+"""Continuous-batching serving benchmark: throughput vs batch occupancy,
+and the paging win measured at equal arena bytes.
 
-Replays the same request stream through the slot-arena engine at several
-arena sizes and reports decode throughput, mean occupancy, per-request
-latency percentiles, and the transfer ledger's bytes-per-token — the live
-analog of the paper's §V.A transfer-bottleneck analysis. Runs on the
-reduced model (CPU-friendly); the analytic full-size numbers live in
-bench_e2e_latency.py.
+Part 1 replays the same request stream through the slot-arena engine at
+several arena sizes and reports decode throughput, mean occupancy,
+per-request latency percentiles, and the transfer ledger's
+bytes-per-token — the live analog of the paper's §V.A
+transfer-bottleneck analysis.
+
+Part 2 holds the KV **storage bytes fixed** and compares the
+whole-sequence slot arena against the paged block-table arena on a
+short-request stream: max concurrent sequences, bytes *resident* per
+live cache token, preemptions, and decode-step compiles (paging must not
+re-jit). This is the serving-density lever: a slot pins ``max_seq``
+tokens of cache for its whole lifetime, a block table pins
+``ceil(len/block)`` blocks.
+
+Runs on the reduced model (CPU-friendly); the analytic full-size numbers
+live in bench_e2e_latency.py.
 """
 from __future__ import annotations
 
@@ -24,20 +35,25 @@ GEN = 8
 PROMPT_MAX = 16
 SLOT_SWEEP = (1, 2, 4, 8)
 
+# Equal-bytes paging comparison: contiguous 2 slots x 32 tokens vs paged
+# 8 blocks x 8 tokens (block_size == max_seq/4) with 8 slot lanes.
+PAGED_MAX_SEQ = 32
+PAGED_BLOCK = 8
+CONT_SLOTS = 2
+PAGED_SLOTS = 8
 
-def make_requests(cfg, rng: np.random.RandomState):
+
+def make_requests(cfg, rng: np.random.RandomState, n=N_REQUESTS,
+                  lo=4, hi=PROMPT_MAX, gen=GEN):
     reqs = []
-    for i in range(N_REQUESTS):
-        L = int(rng.randint(4, PROMPT_MAX + 1))
+    for i in range(n):
+        L = int(rng.randint(lo, hi + 1))
         reqs.append(Request(rid=i, tokens=rng.randint(0, cfg.vocab_size, L),
-                            max_new_tokens=GEN))
+                            max_new_tokens=gen))
     return reqs
 
 
-def main() -> None:
-    cfg = ASSIGNED[ARCH].reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def occupancy_sweep(cfg, model, params) -> None:
     for slots in SLOT_SWEEP:
         engine = ServingEngine(model, params, num_slots=slots,
                                max_seq=PROMPT_MAX + GEN)
@@ -53,6 +69,51 @@ def main() -> None:
              f"p50_ms={pct[50]*1e3:.0f} p99_ms={pct[99]*1e3:.0f} "
              f"bytes_per_tok_MB={report.transfers.bytes_per_token/1e6:.3f} "
              f"step_compiles={report.step_compiles}")
+
+
+def paging_comparison(cfg, model, params) -> None:
+    """Whole-sequence slots vs paged blocks at equal KV storage bytes.
+    The paged arena's +1 null page comes out of its block budget, so the
+    physical storage (arena.nbytes()) is byte-identical, not just
+    logical-capacity-identical."""
+    short = dict(n=12, lo=4, hi=6, gen=3)      # ~1 block per sequence
+    num_blocks = CONT_SLOTS * PAGED_MAX_SEQ // PAGED_BLOCK - 1  # -1: null pg
+    runs = {
+        "contiguous": ServingEngine(model, params, num_slots=CONT_SLOTS,
+                                    max_seq=PAGED_MAX_SEQ),
+        "paged": ServingEngine(model, params, num_slots=PAGED_SLOTS,
+                               max_seq=PAGED_MAX_SEQ,
+                               block_size=PAGED_BLOCK,
+                               num_blocks=num_blocks),
+    }
+    assert runs["paged"].arena.nbytes() == runs["contiguous"].arena.nbytes()
+    results = {}
+    for name, engine in runs.items():
+        reqs = make_requests(cfg, np.random.RandomState(2), **short)
+        report = engine.serve(reqs, seed=0, realtime=False)
+        st = report.stats
+        results[name] = report
+        emit(f"serving/{ARCH}/equal_bytes/{name}/max_concurrent",
+             report.sched.max_occupancy,
+             f"mean_occupancy={report.sched.mean_occupancy:.2f} "
+             f"resident_bytes_per_tok={st.resident_bytes_per_token:.0f} "
+             f"peak_resident_MB={st.peak_resident_bytes/1e6:.3f} "
+             f"preemptions={report.sched.preemptions} "
+             f"step_compiles={report.step_compiles}")
+    ratio = results["paged"].sched.max_occupancy \
+        / max(results["contiguous"].sched.max_occupancy, 1)
+    emit(f"serving/{ARCH}/equal_bytes/concurrency_gain", ratio,
+         f"paged={results['paged'].sched.max_occupancy} "
+         f"contiguous={results['contiguous'].sched.max_occupancy} "
+         f"(acceptance: >= 2x at block_size <= max_seq/4)")
+
+
+def main() -> None:
+    cfg = ASSIGNED[ARCH].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    occupancy_sweep(cfg, model, params)
+    paging_comparison(cfg, model, params)
 
 
 if __name__ == "__main__":

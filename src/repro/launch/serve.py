@@ -9,6 +9,12 @@ measured live instead of modeled):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --quant q8_0 --requests 8 --slots 4 --arrival poisson --rate 4
 
+Paged KV arena (block-table allocation: admit on free blocks, grow
+tables across block boundaries, preempt-to-queue on exhaustion):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
+      --slots 8 --block-size 8 --num-blocks 16
+
 Batch mode (legacy lockstep interface, kept for the paper's fixed [in:out]
 workload grid):
 
@@ -89,17 +95,29 @@ def run_stream(cfg, model, params, args) -> None:
     engine = ServingEngine(
         model, params, quant=args.quant, num_slots=args.slots,
         max_seq=max_seq, offload_decisions=decisions,
-        host_sampling=args.host_sampling)
+        block_size=args.block_size or None, num_blocks=args.num_blocks
+        or None, host_sampling=args.host_sampling)
 
     report = engine.serve(reqs, seed=args.seed)
     st = report.stats
     pct = report.latency_percentiles((50, 90, 99))
+    arena_desc = f"slots={args.slots}"
+    if engine.paged:
+        arena_desc += (f" paged[{engine.arena.num_blocks}x"
+                       f"{engine.arena.block_size}]")
     print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
-          f"({args.arrival}) slots={args.slots} gen={args.gen}")
+          f"({args.arrival}) {arena_desc} gen={args.gen}")
     print(f"  completed {report.sched.completed}/{args.requests} | "
           f"slot reuses {report.sched.slot_reuses} | "
-          f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} | "
+          f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} "
+          f"(max {report.sched.max_occupancy}) | "
           f"decode-step compiles {report.step_compiles}")
+    if engine.paged:
+        print(f"  paged arena: block reissues "
+              f"{engine.arena.allocator.reissues} | preemptions "
+              f"{report.sched.preemptions} | resident/token "
+              f"{st.resident_bytes_per_token:.0f} B | peak resident "
+              f"{st.peak_resident_bytes/1e6:.2f} MB")
     print(f"  prefill {st.prefill_s*1e3:.1f} ms ({st.prefill_tokens} tok) | "
           f"decode {st.decode_s*1e3:.1f} ms ({st.decode_tokens} tok, "
           f"{st.decode_tok_per_s:.1f} tok/s) | "
@@ -152,6 +170,12 @@ def main() -> None:
                     help="stream mode: number of requests")
     ap.add_argument("--slots", type=int, default=4,
                     help="stream mode: KV arena slots")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="stream mode: paged KV arena block size in tokens "
+                         "(0 = contiguous whole-sequence slots)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged arena physical blocks "
+                         "(0 = slots * ceil(max_seq/block_size))")
     ap.add_argument("--arrival", default="poisson",
                     choices=["poisson", "back2back"])
     ap.add_argument("--rate", type=float, default=8.0,
@@ -166,6 +190,8 @@ def main() -> None:
                     help="ledger models llama.cpp-style host sampling "
                          "(full logit rows drained per step)")
     args = ap.parse_args()
+    if args.num_blocks and not args.block_size:
+        ap.error("--num-blocks requires --block-size (paged arena)")
 
     cfg = get_config(args.arch)
     if args.reduced:

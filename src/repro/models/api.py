@@ -45,6 +45,57 @@ class ModelAPI:
         return jax.tree.map(to_spec, shapes,
                             is_leaf=lambda x: isinstance(x, tuple))
 
+    def paged_cache_shapes(self, num_slots: int, num_physical: int,
+                           block_size: int):
+        """Paged-arena storage layout: returns ``(shapes, paged)`` pytrees.
+
+        Leaves whose extent follows the sequence length (attention K/V,
+        MLA latents) become physical pages ``(count, num_physical,
+        block_size, ...)`` with ``paged`` True; constant-size leaves (SSM
+        recurrent/conv state, enc-dec cross KV) keep per-slot storage
+        ``(count, num_slots, ...)`` with ``paged`` False. Detection probes
+        ``cache_shapes`` at two sequence lengths and pages exactly the
+        leaves/axes that moved — no per-family special-casing."""
+        s_a, s_b = 160, 224      # probe lengths; avoid constant-dim collisions
+        ta = self.cache_shapes(num_slots, s_a)
+        tb = self.cache_shapes(num_slots, s_b)
+        is_shape = lambda x: isinstance(x, tuple)
+
+        def pick(sa, sb):
+            if sa == sb:
+                return sa
+            diff = [i for i, (x, y) in enumerate(zip(sa, sb)) if x != y]
+            assert diff == [2] and sa[2] == s_a, \
+                f"unsupported cache layout for paging: {sa} vs {sb}"
+            return (sa[0], num_physical, block_size) + sa[3:]
+
+        shapes = jax.tree.map(pick, ta, tb, is_leaf=is_shape)
+        paged = jax.tree.map(lambda sa, sb: sa != sb, ta, tb,
+                             is_leaf=is_shape)
+        return shapes, paged
+
+    def paged_decode_specs(self, num_slots: int, num_blocks: int,
+                           block_size: int, max_seq: int,
+                           dtype=jnp.bfloat16) -> Dict:
+        """Entry ShapeDtypeStructs for the paged serving decode step:
+        ``slot_decode_specs`` plus the per-slot block tables, over
+        (num_blocks + 1, block_size) page storage (the +1 is the arena's
+        null block)."""
+        shapes, _ = self.paged_cache_shapes(num_slots, num_blocks + 1,
+                                            block_size)
+        to_spec = lambda x: jax.ShapeDtypeStruct(x, dtype) \
+            if isinstance(x, tuple) else x
+        max_blocks = -(-max_seq // block_size)
+        return {
+            "token": jax.ShapeDtypeStruct((num_slots, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((num_slots,), jnp.int32),
+            "active": jax.ShapeDtypeStruct((num_slots,), jnp.bool_),
+            "block_tables": jax.ShapeDtypeStruct((num_slots, max_blocks),
+                                                 jnp.int32),
+            "cache": jax.tree.map(to_spec, shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+        }
+
     def slot_decode_specs(self, num_slots: int, max_seq: int,
                           dtype=jnp.bfloat16) -> Dict:
         """Entry ShapeDtypeStructs for the serving engine's slot-batched

@@ -13,6 +13,14 @@ KV caches:
   GQA:  {"k": (B, S, Hkv, D), "v": (B, S, Hkv, D)}
   MLA:  {"ckv": (B, S, kv_lora_rank), "krope": (B, S, rope_dim)}  (compressed;
         decode uses the absorbed-matmul form so the cache is never expanded)
+
+Paged decode (``block_tables`` passed): cache leaves are physical pages —
+GQA {"k": (NB, bs, Hkv, D), ...}, MLA {"ckv": (NB, bs, rank), ...} — and
+``block_tables`` (B, max_blocks) int32 maps each slot's logical blocks to
+pages. The new token is scattered to its page and attention reads K/V
+through a per-slot table gather; the gather *is* the KV read decode
+attention performs anyway, so paging costs no extra cache traffic while
+block allocation stays a host-side table edit (no traced-shape change).
 """
 from __future__ import annotations
 
@@ -235,15 +243,46 @@ def _insert_kv(cache_arr: jnp.ndarray, new: jnp.ndarray,
     return jax.vmap(one)(cache_arr, new, p)
 
 
+# ----------------------------------------------------------------------
+# Paged cache plumbing (block-table gather/scatter inside the jitted step)
+# ----------------------------------------------------------------------
+def paged_insert_token(pages: jnp.ndarray, new: jnp.ndarray, position,
+                       block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Scatter (B, 1, ...) ``new`` into (NB, bs, ...) ``pages`` at each
+    slot's ``position``, routed through ``block_tables`` (B, max_blocks).
+
+    Blocks are uniquely owned by one slot, so active slots never collide;
+    inactive slots' table entries all point at the arena's null block —
+    their (masked, discarded) writes land there harmlessly."""
+    bs = pages.shape[1]
+    b = new.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(position), (b,))
+    blk = pos // bs
+    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    return pages.at[phys, pos % bs].set(new[:, 0].astype(pages.dtype))
+
+
+def paged_view(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather each slot's logical KV view (B, max_blocks*bs, ...) from
+    (NB, bs, ...) pages. Unassigned table entries gather the null block;
+    those positions sit past kv_len and are masked to NEG_INF before the
+    softmax, so their (finite) garbage never contributes."""
+    v = pages[block_tables]                      # (B, max_blocks, bs, ...)
+    return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
 def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                position, cache: Dict, *, fmt: str = "none",
                impl: str = "ref", interpret: bool = True,
-               mrope_positions=None, cross: bool = False):
-    """One-token decode. x: (B, 1, d); ``position``: scalar int32; cache
-    {"k","v"}: (B, S, Hkv, D) pre-allocated. Returns (out, cache).
+               mrope_positions=None, cross: bool = False,
+               block_tables=None):
+    """One-token decode. x: (B, 1, d); ``position``: scalar int32 or (B,);
+    cache {"k","v"}: (B, S, Hkv, D) pre-allocated — or physical pages
+    (NB, bs, Hkv, D) when ``block_tables`` (B, max_blocks) is passed.
+    Returns (out, cache).
 
     ``cross``: whisper cross-attention — attend to a static encoder cache
-    without inserting."""
+    without inserting (cross caches stay per-slot, never paged)."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim()
     pos2 = position_vector(position, b)
@@ -252,6 +291,13 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     if cross:
         kc, vc = cache["k"], cache["v"]
         kv_len = None
+    elif block_tables is not None:
+        kp = paged_insert_token(cache["k"], k, position, block_tables)
+        vp = paged_insert_token(cache["v"], v, position, block_tables)
+        cache = {"k": kp, "v": vp}
+        kc = paged_view(kp, block_tables)
+        vc = paged_view(vp, block_tables)
+        kv_len = pos2[:, 0] + 1
     else:
         kc = _insert_kv(cache["k"], k, position)
         vc = _insert_kv(cache["v"], v, position)
@@ -348,19 +394,32 @@ def mla_prefill(p, cfg, x, positions, *, fmt="none", impl="ref",
 
 
 def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
-               interpret=True):
+               interpret=True, block_tables=None):
     """Absorbed-matmul MLA decode: the kv_b projection is folded into the
     query/output sides so the compressed cache is attended directly —
-    no (B, S, H, D) expansion ever materializes."""
+    no (B, S, H, D) expansion ever materializes.
+
+    With ``block_tables``, cache leaves are physical pages (NB, bs, ...)
+    and the compressed latents are scattered/gathered through the table,
+    same contract as the paged GQA path."""
     m = cfg.mla
     h = cfg.num_heads
     b = x.shape[0]
     pos2 = position_vector(position, b)
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
         p, cfg, x, pos2, fmt, impl, interpret)
-    ckv = _insert_kv(cache["ckv"], ckv_new, position)
-    krope = _insert_kv(cache["krope"], krope_new, position)
-    cache = {"ckv": ckv, "krope": krope}
+    if block_tables is not None:
+        ckv_p = paged_insert_token(cache["ckv"], ckv_new, position,
+                                   block_tables)
+        krope_p = paged_insert_token(cache["krope"], krope_new, position,
+                                     block_tables)
+        cache = {"ckv": ckv_p, "krope": krope_p}
+        ckv = paged_view(ckv_p, block_tables)
+        krope = paged_view(krope_p, block_tables)
+    else:
+        ckv = _insert_kv(cache["ckv"], ckv_new, position)
+        krope = _insert_kv(cache["krope"], krope_new, position)
+        cache = {"ckv": ckv, "krope": krope}
 
     wkv = layers.linear_dense_weight(p["kv_b"], fmt, dtype=jnp.float32)
     wkv = wkv[:, :m.kv_lora_rank]      # drop K-quant padding columns

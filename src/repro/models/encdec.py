@@ -220,7 +220,10 @@ def encdec_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
 
 
 def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
-                       quant="none", impl="ref", interpret=True):
+                       quant="none", impl="ref", interpret=True,
+                       block_tables=None):
+    """``block_tables``: paged-arena tables for the decoder *self*-attn KV
+    (the cross KV is a constant-size per-slot state — never paged)."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
     b = token.shape[0]
@@ -237,7 +240,7 @@ def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
         hn = layers.layernorm_apply(lp["self_norm"], h)
         mix, self_cache = attn.gqa_decode(
             lp["self_attn"], cfg, hn, position, lc["self"], fmt=fmt,
-            impl=impl, interpret=interpret)
+            impl=impl, interpret=interpret, block_tables=block_tables)
         h = h + mix
         hn = layers.layernorm_apply(lp["cross_norm"], h)
         q = layers.linear_apply(lp["cross_attn"]["q"], hn, fmt, impl=impl,

@@ -131,16 +131,21 @@ def layer_prefill(p: Params, cfg: ModelConfig, h, positions, *, mixer, ffn,
 
 
 def layer_decode(p: Params, cfg: ModelConfig, h, position, cache, *,
-                 mixer, ffn, fmt, impl, interpret, mrope_positions=None):
-    """One-token layer step. Returns (h, new_cache)."""
+                 mixer, ffn, fmt, impl, interpret, mrope_positions=None,
+                 block_tables=None):
+    """One-token layer step. Returns (h, new_cache). ``block_tables``:
+    paged-arena tables threaded to the attention mixers (SSM states are
+    per-slot constants — paging does not apply)."""
     hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
     if mixer == "gqa":
         mix, cache = attn.gqa_decode(p["attn"], cfg, hn, position, cache,
                                      fmt=fmt, impl=impl, interpret=interpret,
-                                     mrope_positions=mrope_positions)
+                                     mrope_positions=mrope_positions,
+                                     block_tables=block_tables)
     elif mixer == "mla":
         mix, cache = attn.mla_decode(p["attn"], cfg, hn, position, cache,
-                                     fmt=fmt, impl=impl, interpret=interpret)
+                                     fmt=fmt, impl=impl, interpret=interpret,
+                                     block_tables=block_tables)
     else:
         mix, cache = ssm.ssm_decode(p["ssm"], cfg, hn, cache, fmt=fmt,
                                     impl=impl, interpret=interpret)
@@ -367,10 +372,14 @@ def lm_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
 
 def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                    position, cache, *, quant="none", impl="ref",
-                   interpret=True):
+                   interpret=True, block_tables=None):
     """token: (B, 1) int32; position: scalar int32 (lockstep batch) or
     (B,) int32 (per-slot arena depths); cache from prefill or
-    ``lm_cache_shapes``. Returns (logits (B, 1, V), new_cache)."""
+    ``lm_cache_shapes``. Returns (logits (B, 1, V), new_cache).
+
+    ``block_tables``: (B, max_blocks) int32 — paged-arena mode: attention
+    cache leaves are physical pages and K/V are read through a per-slot
+    block-table gather (see ``PagedKVArena``)."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
     b = token.shape[0]
@@ -394,7 +403,8 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                 h, c = layer_decode(lp, cfg, h, position, lc,
                                     mixer=subs[0][0], ffn=subs[0][1],
                                     fmt=fmt, impl=impl, interpret=interpret,
-                                    mrope_positions=mrope_pos)
+                                    mrope_positions=mrope_pos,
+                                    block_tables=block_tables)
             else:
                 c = {}
                 for i, (mx, ff) in enumerate(subs):
@@ -402,7 +412,8 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                                          lc[f"sub{i}"], mixer=mx, ffn=ff,
                                          fmt=fmt, impl=impl,
                                          interpret=interpret,
-                                         mrope_positions=mrope_pos)
+                                         mrope_positions=mrope_pos,
+                                         block_tables=block_tables)
                     c[f"sub{i}"] = ci
             return h, c
         h, new_cache = jax.lax.scan(body, h, (params[name], cache[name]),

@@ -4,13 +4,22 @@ Layered runtime (paper §III.A transplanted to TPU/JAX, grown into a
 scheduler/executor/cache-manager stack):
 
   * `runtime/request.py`   — request/sequence state machine
-  * `runtime/scheduler.py` — FCFS admission into free arena slots
-  * `runtime/kvcache.py`   — preallocated slot arena (cache manager)
+  * `runtime/scheduler.py` — FCFS admission into free arena capacity
+  * `runtime/kvcache.py`   — cache manager: contiguous slot arena, or the
+                             paged block-table arena (``block_size`` set)
   * `runtime/transfers.py` — host<->device byte ledger (paper §V.A: data
                              transfer, not kernels, is the bottleneck)
   * this file              — the step executor: ONE jitted decode step
                              over (params, token-batch, positions,
-                             active-mask, arena) with fused masked sampling
+                             active-mask, arena[, block-tables]) with
+                             fused masked sampling
+
+Paged mode: admission needs a free slot AND ``ceil(prompt/block_size)``
+free blocks; decode reserves one block each time a sequence crosses a
+block boundary; on allocator exhaustion the youngest sequence is
+preempted back to the queue (recompute). The block tables ride into the
+jitted step as a (num_slots, max_blocks) int32 argument, so mid-decode
+allocation never changes a traced shape.
 
 Execution model per sequence: prefill runs the prompt's first L-1 tokens
 (bucketed to a power-of-two length so a handful of compilations cover every
@@ -34,7 +43,7 @@ import numpy as np
 from repro.core import convert
 from repro.models.api import ModelAPI
 from repro.runtime import sampling
-from repro.runtime.kvcache import KVArena
+from repro.runtime.kvcache import KVArena, PagedKVArena
 from repro.runtime.request import Request, SamplingParams, Sequence
 from repro.runtime.scheduler import Scheduler, SchedulerStats
 from repro.runtime.transfers import TransferLedger, TransferReport
@@ -49,7 +58,18 @@ class GenStats:
     prefill_tokens: int = 0         # prompt tokens processed in prefill phase
     decode_tokens: int = 0          # tokens emitted by decode steps
     cache_bytes: int = 0
+    peak_resident_bytes: float = 0.0    # max arena bytes pinned by live seqs
+    resident_bytes_sum: float = 0.0     # per-step resident-bytes accumulator
+    live_tokens_sum: int = 0            # per-step live-cache-token accumulator
     transfers: Optional[TransferReport] = None
+
+    @property
+    def resident_bytes_per_token(self) -> float:
+        """Mean arena bytes *reserved* per live cache token over the run —
+        the paging win: the slot arena pins max_seq per sequence, the
+        paged arena pins ceil(len/block)*block."""
+        return self.resident_bytes_sum / self.live_tokens_sum \
+            if self.live_tokens_sum else 0.0
 
     @property
     def e2e_s(self) -> float:
@@ -107,6 +127,8 @@ class ServingEngine:
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  num_slots: int = 4, max_seq: int = 2048, impl: str = "ref",
                  top_k: int = 0, top_p: float = 1.0,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True):
         if num_slots < 1:
@@ -118,25 +140,50 @@ class ServingEngine:
         self.max_seq = max_seq
         self.impl = impl
         self.top_k, self.top_p = top_k, top_p
+        self.paged = block_size is not None
         self._ledger_kw = dict(decisions=offload_decisions,
                                host_sampling=host_sampling)
-        self.arena = KVArena(model, num_slots, max_seq)
+        if self.paged:
+            self.arena = PagedKVArena(model, num_slots, max_seq,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks)
+        else:
+            self.arena = KVArena(model, num_slots, max_seq)
         self.sched = Scheduler(num_slots, max_seq)
         self._step_compiles = 0
 
         kw = dict(quant=quant, impl=impl)
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, **kw))
 
-        def step(p, token, positions, active, arena, key, temps):
-            logits, arena = model.decode_step(p, token, positions, arena,
-                                              **kw)
-            nxt = sampling.sample_slots(logits[:, -1], key, temps, active,
-                                        top_k=top_k, top_p=top_p)
-            return nxt, arena
+        if self.paged:
+            def step(p, token, positions, active, arena, key, temps,
+                     tables):
+                logits, arena = model.decode_step(p, token, positions,
+                                                  arena,
+                                                  block_tables=tables, **kw)
+                nxt = sampling.sample_slots(logits[:, -1], key, temps,
+                                            active, top_k=top_k, top_p=top_p)
+                return nxt, arena
+        else:
+            def step(p, token, positions, active, arena, key, temps):
+                logits, arena = model.decode_step(p, token, positions,
+                                                  arena, **kw)
+                nxt = sampling.sample_slots(logits[:, -1], key, temps,
+                                            active, top_k=top_k, top_p=top_p)
+                return nxt, arena
         self._step = jax.jit(step,
                              donate_argnums=(4,) if donate_cache else ())
 
     # ------------------------------------------------------------------
+    def _try_admit(self, seq: Sequence) -> Optional[int]:
+        """Arena-side admission gate. Contiguous arena: any free slot.
+        Paged arena: a free slot AND the prompt's whole block reservation
+        (``ceil(prompt/block_size)`` blocks), all-or-nothing."""
+        if not self.paged:
+            return self.arena.alloc()
+        nb = self.arena.blocks_needed(seq.req.prompt_len)
+        return self.arena.alloc_slot(nb)
+
     def _admit_prefill(self, seq: Sequence, stats: GenStats,
                        ledger: TransferLedger) -> None:
         """Run the bucketed prefill for one admitted sequence and write its
@@ -157,8 +204,47 @@ class ServingEngine:
         stats.prefill_s += time.perf_counter() - t0
         stats.prefill_tokens += pre_len
         ledger.charge_prefill(P)
-        ledger.charge_cache_growth("prefill",
-                                   pre_len * self.arena.token_bytes())
+        if self.paged:
+            # Block-granular cache growth: the admission reservation.
+            ledger.charge_cache_growth(
+                "prefill", len(self.arena.slot_blocks(seq.slot))
+                * self.arena.block_bytes())
+        else:
+            ledger.charge_cache_growth("prefill",
+                                       pre_len * self.arena.token_bytes())
+
+    def _preempt(self, seq: Sequence) -> None:
+        """Recompute-preemption: reclaim the victim's slot and blocks and
+        push it back to the queue head."""
+        slot = self.sched.preempt(seq)
+        self.arena.free_slot(slot)
+
+    def _reserve_decode(self, ledger: TransferLedger) -> None:
+        """Grow each active sequence's block table to cover its next cache
+        write (position ``seq.position`` needs ``position + 1`` covered
+        tokens). Oldest-first, so under scarcity the last free block goes
+        to the sequence preemption would keep (granting it youngest-first
+        would hand a block to the imminent victim and waste it). On
+        allocator exhaustion, preempt the youngest active sequence and
+        retry; age order guarantees the oldest sequence can always run
+        alone, so the stream never deadlocks."""
+        by_age = sorted(self.sched.active.values(),
+                        key=lambda s: s.admit_seq)
+        for seq in by_age:
+            slot = seq.slot
+            if self.sched.active.get(slot) is not seq:
+                continue                        # preempted by an earlier turn
+            while True:
+                fresh = self.arena.ensure(slot, seq.position + 1)
+                if fresh is not None:
+                    if fresh:
+                        ledger.charge_cache_growth(
+                            "decode", fresh * self.arena.block_bytes())
+                    break
+                victim = self.sched.preempt_victim()
+                self._preempt(victim)
+                if victim is seq:
+                    break                       # evicted ourselves: skip step
 
     def _decode_once(self, key, stats: GenStats, ledger: TransferLedger,
                      t0: float) -> None:
@@ -178,19 +264,31 @@ class ServingEngine:
 
         t_step = time.perf_counter()
         before = self._jit_cache_size()
-        nxt, self.arena.buffers = self._step(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(active), self.arena.buffers, key,
-            jnp.asarray(temps))
+        step_args = [self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                     jnp.asarray(active), self.arena.buffers, key,
+                     jnp.asarray(temps)]
+        if self.paged:
+            dev_tables, uploaded = self.arena.device_tables()
+            step_args.append(dev_tables)
+            if uploaded:        # dirty tables only: admission/growth/preempt
+                ledger.charge("decode", "tables", "h2d", uploaded)
+        nxt, self.arena.buffers = self._step(*step_args)
         nxt_host = np.asarray(nxt)            # blocks until step completes
         t_end = time.perf_counter()
         stats.decode_s += t_end - t_step
         now = t_end - t0
         self._step_compiles += self._jit_cache_size() - before
 
+        resident = self.arena.resident_bytes()
+        stats.peak_resident_bytes = max(stats.peak_resident_bytes, resident)
+        stats.resident_bytes_sum += resident
+        stats.live_tokens_sum += int(sum(
+            s.position + 1 for s in self.sched.active.values()))
         for slot, seq in list(self.sched.active.items()):
             ledger.charge_decode_step(int(positions[slot]) + 1)
-            ledger.charge_cache_growth("decode", self.arena.token_bytes())
+            if not self.paged:      # paged growth is charged per block
+                ledger.charge_cache_growth("decode",
+                                           self.arena.token_bytes())
             seq.record_token(int(nxt_host[slot]), now)
             stats.decode_tokens += 1
         self.sched.record_step()
@@ -206,6 +304,18 @@ class ServingEngine:
         """Run a request stream to completion. ``realtime``: honor
         ``arrival_s`` offsets against the wall clock (sleep while idle);
         False replays arrivals against the virtual step clock only."""
+        if self.paged:
+            for r in requests:
+                # Last cache write lands at position prompt+gen-2 (the
+                # final sampled token is returned, never inserted), so
+                # peak demand is prompt+gen-1 covered positions.
+                need = self.arena.blocks_needed(r.prompt_len
+                                                + r.max_new_tokens - 1)
+                if need > self.arena.num_blocks:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} blocks at full "
+                        f"length, arena has {self.arena.num_blocks} — "
+                        f"could never finish even running alone")
         for r in requests:
             self.sched.submit(r)
         stats = GenStats()
@@ -216,11 +326,21 @@ class ServingEngine:
 
         while self.sched.has_work:
             now = time.perf_counter() - t0
-            admitted = self.sched.admit(self.arena.alloc, now)
+            if self.paged:
+                # Incumbents reserve their next-step blocks BEFORE new
+                # admissions take them (may preempt-to-queue): admitting
+                # first could burn a full prefill on a sequence that the
+                # very next reserve pass would evict. A fresh admission's
+                # first write is covered by its own admission reservation,
+                # so skipping it here is safe.
+                self._reserve_decode(ledger)
+            admitted = self.sched.admit(self._try_admit, now)
             for seq in admitted:
                 self._admit_prefill(seq, stats, ledger)
                 seq.start_decode()
             if not self.sched.active:
+                if self.sched.queue:
+                    continue    # preempted/starved: blocks freed, re-admit
                 nxt = self.sched.next_arrival()
                 if nxt is None:
                     break               # queued-but-no-slot cannot happen here

@@ -1,21 +1,40 @@
 """KV/state cache management for the serving engine.
 
-Contiguous pre-allocated caches (paper-faithful: llama.cpp uses a
-contiguous KV arena managed by the host, Fig. 4 keeps "KV cache management"
-on the host side), organized as a **slot-based arena**: one preallocated
-cache pytree sized (num_slots, max_seq), where each slot hosts one live
-sequence. Finished sequences free their slot mid-flight and a queued
-request takes it over without any reallocation or re-jit — the continuous
-batching substrate. Paged attention is an orthogonal extension noted in
-DESIGN.md future work.
+Two arenas, one scheduler-facing contract (alloc/free slots, write
+prefill, account bytes):
+
+* ``KVArena`` — the contiguous slot arena (paper-faithful: llama.cpp uses
+  a contiguous KV arena managed by the host, Fig. 4 keeps "KV cache
+  management" on the host side): one preallocated cache pytree sized
+  (num_slots, max_seq), each slot hosting one live sequence for its whole
+  lifetime. Simple, but every slot reserves ``max_seq`` tokens of cache
+  regardless of actual sequence length.
+
+* ``PagedKVArena`` — paged/block KV allocation. Cache storage becomes
+  (num_blocks, block_size, ...) leaves managed by a ``BlockAllocator``
+  free list; each sequence holds a growable **block table** (logical
+  block -> physical block) instead of a contiguous stripe. KV bytes
+  resident per sequence shrink from ``max_seq`` to
+  ``ceil(len / block_size) * block_size`` tokens, so the same arena bytes
+  absorb far more concurrent short sequences — the serving-density lever
+  the hardware-accelerator surveys (Kachris 2024; Li et al. 2024) call
+  out, applied to the paper's host-side cache-management finding.
+  Constant-size states (SSM recurrent state, enc-dec cross KV) are not
+  paged: they keep per-slot storage and a degenerate one-block table.
+
+Decode steps read K/V *through* the block table inside the jitted step
+(per-slot gather), so block allocation mid-decode never changes a traced
+shape — continuous batching and paging compose without re-jit.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional
+import heapq
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.api import ModelAPI
 
@@ -30,16 +49,77 @@ def allocate(model: ModelAPI, batch: int, max_seq: int,
     return jax.tree.map(mk, shapes, is_leaf=lambda x: isinstance(x, tuple))
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _arena_insert(arena, prefill_cache, slot):
-    """Write a B=1 prefill cache into arena slot ``slot`` (traced scalar, so
-    every slot shares one compilation per prefill-cache shape). Leaves are
-    (L, B, S, ...): insert at (0, slot, 0, ...) — one in-place
-    dynamic_update_slice per leaf, no fresh padded copy."""
-    def w(a, c):
-        start = (0, slot) + (0,) * (a.ndim - 2)
-        return jax.lax.dynamic_update_slice(a, c.astype(a.dtype), start)
-    return jax.tree.map(w, arena, prefill_cache)
+class _FreeHeap:
+    """Min-heap free list with O(log n) alloc/free and a membership set
+    guarding double-frees (the old list-based free list re-sorted the
+    whole list on every free — O(n log n) per release)."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self._heap: List[int] = list(range(n))   # already heap-ordered
+        self._free_set = set(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def pop(self) -> Optional[int]:
+        if not self._heap:
+            return None
+        i = heapq.heappop(self._heap)
+        self._free_set.discard(i)
+        return i
+
+    def push(self, i: int) -> None:
+        if i in self._free_set or not (0 <= i < self.n):
+            raise ValueError(f"bad free: {i}")
+        heapq.heappush(self._heap, i)
+        self._free_set.add(i)
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` physical KV blocks of
+    ``block_size`` tokens each. All-or-nothing multi-block allocation
+    (an admission either gets its whole reservation or stays queued)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(
+                f"need num_blocks >= 1 and block_size >= 1, got "
+                f"{num_blocks}/{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = _FreeHeap(num_blocks)
+        self._ever_used: set = set()
+        self.reissues = 0               # allocations of a previously-freed block
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to cover ``tokens`` cache positions."""
+        return max(1, -(-int(tokens) // self.block_size))
+
+    # -- lifecycle -------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` blocks (lowest ids first) or None if < n are free."""
+        if n < 0:
+            raise ValueError(f"bad alloc count: {n}")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self.reissues += sum(1 for b in out if b in self._ever_used)
+        self._ever_used.update(out)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            self._free.push(b)
 
 
 class KVArena:
@@ -58,7 +138,7 @@ class KVArena:
         self.max_seq = max_seq
         self.dtype = dtype
         self.buffers = allocate(model, num_slots, max_seq, dtype)
-        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._free = _FreeHeap(num_slots)
 
     # -- slot lifecycle -------------------------------------------------
     @property
@@ -71,13 +151,10 @@ class KVArena:
 
     def alloc(self) -> Optional[int]:
         """Claim a free slot (lowest index first) or None when full."""
-        return self._free.pop() if self._free else None
+        return self._free.pop()
 
     def free(self, slot: int) -> None:
-        if slot in self._free or not (0 <= slot < self.num_slots):
-            raise ValueError(f"bad slot free: {slot}")
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        self._free.push(slot)
 
     # -- storage --------------------------------------------------------
     def write_prefill(self, prefill_cache, slot: int) -> None:
@@ -96,6 +173,240 @@ class KVArena:
         """Approximate cache bytes appended per generated token (exact for
         pure seq-indexed KV; SSM constant-size states amortized)."""
         return self.slot_bytes() / self.max_seq
+
+    def resident_bytes(self) -> float:
+        """Arena bytes reserved by live sequences. Whole-sequence slots
+        pin a full max_seq stripe from admission to completion."""
+        return self.used_slots * self.slot_bytes()
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_insert(arena, prefill_cache, slot):
+    """Write a B=1 prefill cache into arena slot ``slot`` (traced scalar, so
+    every slot shares one compilation per prefill-cache shape). Leaves are
+    (L, B, S, ...): insert at (0, slot, 0, ...) — one in-place
+    dynamic_update_slice per leaf, no fresh padded copy."""
+    def w(a, c):
+        start = (0, slot) + (0,) * (a.ndim - 2)
+        return jax.lax.dynamic_update_slice(a, c.astype(a.dtype), start)
+    return jax.tree.map(w, arena, prefill_cache)
+
+
+@functools.partial(jax.jit, static_argnums=(4,), donate_argnums=(0,))
+def _paged_insert(buf_leaves, cache_leaves, phys, slot, paged_flags):
+    """Scatter a B=1 prefill cache into an arena's physical blocks.
+
+    ``buf_leaves``/``cache_leaves``: flattened leaf lists (same treedef).
+    Paged leaves: buffer (L, NB, bs, ...), cache (L, 1, P, ...) — the P
+    prefilled positions are re-blocked and scattered to the ``phys`` block
+    ids (padding past P is garbage-but-masked, exactly like the slot
+    arena's bucket padding; positions past the reservation are dropped).
+    Constant leaves: buffer (L, num_slots, ...), written at ``slot``.
+    Static ``paged_flags`` keeps one compilation per (cache shape, block
+    count) pair — bucketed prompts bound the compile count.
+    """
+    nbw = phys.shape[0]
+    out = []
+    for a, c, is_paged in zip(buf_leaves, cache_leaves, paged_flags):
+        c = c.astype(a.dtype)
+        if not is_paged:
+            start = (0, slot) + (0,) * (a.ndim - 2)
+            out.append(jax.lax.dynamic_update_slice(a, c, start))
+            continue
+        bs = a.shape[2]
+        c2 = c[:, 0]                                 # (L, P, ...)
+        want = nbw * bs
+        P = c2.shape[1]
+        if P < want:
+            pad = [(0, 0), (0, want - P)] + [(0, 0)] * (c2.ndim - 2)
+            c2 = jnp.pad(c2, pad)
+        elif P > want:
+            c2 = c2[:, :want]
+        c2 = c2.reshape((c2.shape[0], nbw, bs) + c2.shape[2:])
+        out.append(a.at[:, phys].set(c2))
+    return out
+
+
+class PagedKVArena:
+    """Block-table KV arena: storage is (num_blocks, block_size) pages,
+    each slot maps logical blocks to physical blocks through a growable
+    table. One extra physical block (id ``num_blocks``) is the **null
+    block**: unassigned table entries and inactive slots' writes land
+    there, so the jitted step never needs a data-dependent guard.
+
+    Lifecycle: ``alloc_slot(nblocks)`` admits a sequence (slot + initial
+    reservation, all-or-nothing), ``ensure(slot, tokens)`` grows the table
+    as decode crosses block boundaries (None on allocator exhaustion —
+    the engine preempts), ``free_slot`` returns everything to the free
+    lists. Blocks owned by distinct slots never alias, so the per-step
+    scatter of new K/V through the table is collision-free.
+    """
+
+    def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
+                 block_size: int, num_blocks: Optional[int] = None,
+                 dtype=jnp.bfloat16):
+        if not (1 <= block_size <= max_seq):
+            raise ValueError(f"block_size {block_size} outside [1, {max_seq}]")
+        self.model = model
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.max_blocks = -(-max_seq // block_size)   # table width per slot
+        if num_blocks is None:
+            num_blocks = num_slots * self.max_blocks  # capacity parity
+        self.num_blocks = num_blocks
+        self.null_block = num_blocks                  # last physical page
+        self.dtype = dtype
+
+        shapes, paged = model.paged_cache_shapes(num_slots, num_blocks + 1,
+                                                 block_size)
+        self.buffers = jax.tree.map(
+            lambda x: jnp.zeros(x, dtype) if isinstance(x, tuple) else x,
+            shapes, is_leaf=lambda x: isinstance(x, tuple))
+        self._paged_flags: Tuple[bool, ...] = tuple(jax.tree.leaves(paged))
+        self.has_paged = any(self._paged_flags)
+        # Shape-static byte quantities, precomputed once (resident_bytes
+        # runs on the per-step hot path).
+        self._nbytes = cache_nbytes(self.buffers)
+        self._block_bytes = float(sum(
+            x.size // x.shape[1] * x.dtype.itemsize
+            for x, f in zip(jax.tree.leaves(self.buffers),
+                            self._paged_flags) if f))
+        self._const_bytes = self._nbytes \
+            - self._block_bytes * (num_blocks + 1)
+
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self._free_slots = _FreeHeap(num_slots)
+        self.tables = np.full((num_slots, self.max_blocks), self.null_block,
+                              np.int32)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(num_slots)]
+        self._dev_tables: Optional[jnp.ndarray] = None   # upload cache
+        self.table_uploads = 0
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def used_slots(self) -> int:
+        return self.num_slots - len(self._free_slots)
+
+    def blocks_needed(self, tokens: int) -> int:
+        """Blocks covering ``tokens`` cache positions (1 for models with
+        no seq-indexed cache — the degenerate one-block table)."""
+        if not self.has_paged:
+            return 1
+        return self.allocator.blocks_for(tokens)
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return list(self._slot_blocks[slot])
+
+    def device_tables(self) -> Tuple[jnp.ndarray, int]:
+        """(device table array, bytes uploaded now). Tables mutate only at
+        admission / block-boundary crossings / preemption, so the device
+        copy is cached and re-uploaded only when dirty — steady-state
+        decode steps move zero table bytes."""
+        fresh = 0
+        if self._dev_tables is None:
+            self._dev_tables = jnp.asarray(self.tables)
+            fresh = self.tables.nbytes
+            self.table_uploads += 1
+        return self._dev_tables, fresh
+
+    # -- slot/block lifecycle --------------------------------------------
+    def alloc_slot(self, nblocks: int) -> Optional[int]:
+        """Admit: claim a slot AND its initial ``nblocks`` reservation,
+        all-or-nothing (ISSUE gate: admit when ceil(prompt/block) blocks
+        are free). Returns the slot or None."""
+        if self.free_slots == 0:
+            return None
+        blocks = self.allocator.alloc(nblocks)
+        if blocks is None:
+            return None
+        slot = self._free_slots.pop()
+        self._slot_blocks[slot] = blocks
+        self.tables[slot, :len(blocks)] = blocks
+        self._dev_tables = None
+        return slot
+
+    def ensure(self, slot: int, tokens: int) -> Optional[int]:
+        """Grow ``slot``'s table to cover ``tokens`` positions. Returns
+        the number of newly allocated blocks, or None on exhaustion (the
+        caller preempts a victim and retries)."""
+        need = self.blocks_needed(tokens)
+        have = len(self._slot_blocks[slot])
+        if need <= have:
+            return 0
+        fresh = self.allocator.alloc(need - have)
+        if fresh is None:
+            return None
+        self.tables[slot, have:need] = fresh
+        self._slot_blocks[slot].extend(fresh)
+        self._dev_tables = None
+        return len(fresh)
+
+    def free_slot(self, slot: int) -> None:
+        self.allocator.free(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self.tables[slot] = self.null_block
+        self._dev_tables = None
+        self._free_slots.push(slot)
+
+    # ``KVArena``-compatible aliases so the scheduler's retire path is
+    # arena-agnostic.
+    def free(self, slot: int) -> None:
+        self.free_slot(slot)
+
+    # -- storage ---------------------------------------------------------
+    def write_prefill(self, prefill_cache, slot: int) -> None:
+        """Scatter a B=1 prefill cache into ``slot``'s reserved blocks.
+        The bucketed prefill length P may overrun the reservation (bucket
+        jump past ceil(prompt/block)); the overrun is pad garbage and is
+        routed to the null block — every dropped position is rewritten by
+        the decode step before first use, exactly like slot-arena bucket
+        padding. The scatter width is always ``blocks_for(P)`` (real
+        blocks first, null-block padding after), so the jit trace count
+        tracks the prompt *buckets*, not per-prompt reservation sizes."""
+        leaves = jax.tree.leaves(prefill_cache)
+        phys_ids = self._slot_blocks[slot][:1]
+        if self.has_paged:
+            P = next(c.shape[2] for c, f in zip(leaves, self._paged_flags)
+                     if f)
+            nbw = self.allocator.blocks_for(P)
+            phys_ids = self._slot_blocks[slot][:nbw]
+            phys_ids = phys_ids + [self.null_block] * (nbw - len(phys_ids))
+        phys = jnp.asarray(phys_ids, jnp.int32)
+        buf_leaves, treedef = jax.tree.flatten(self.buffers)
+        new = _paged_insert(buf_leaves, leaves, phys, jnp.int32(slot),
+                            self._paged_flags)
+        self.buffers = jax.tree.unflatten(treedef, new)
+
+    # -- byte accounting --------------------------------------------------
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def block_bytes(self) -> float:
+        """Bytes of paged storage backing one physical block."""
+        return self._block_bytes
+
+    def const_bytes(self) -> float:
+        """Bytes of non-paged per-slot storage (SSM states, cross KV)."""
+        return self._const_bytes
+
+    def token_bytes(self) -> float:
+        """Cache bytes appended per generated token (paged leaves only;
+        constant-size states are admission-time, not per-token)."""
+        if not self.has_paged:
+            return self.const_bytes() / max(self.num_slots, 1) / self.max_seq
+        return self.block_bytes() / self.block_size
+
+    def resident_bytes(self) -> float:
+        """Bytes pinned by live sequences right now: allocated blocks at
+        block granularity + per-slot constant state for used slots."""
+        const_slot = self.const_bytes() / max(self.num_slots, 1)
+        return self.allocator.used_blocks * self.block_bytes() \
+            + self.used_slots * const_slot
 
 
 def cache_nbytes(cache) -> int:

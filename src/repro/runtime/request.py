@@ -5,11 +5,17 @@ generation budget, and an arrival time (for request-stream replay). The
 scheduler wraps it in a ``Sequence`` — the engine-side state machine
 
     QUEUED -> PREFILL -> DECODE -> DONE
+               ^           |
+               +- preempt -+   (paged arena exhausted: back to QUEUED)
 
 where PREFILL covers the prompt's first L-1 tokens (batched, padded to a
 bucket) and DECODE consumes one token per engine step starting with the
 held-back last prompt token, so *every* sampled token flows through the
 jitted masked decode step (no host-side prefill sampling special case).
+
+Preemption is recompute-style: the victim's KV blocks are reclaimed and
+the sequence restarts from its prompt on re-admission (greedy decodes
+reproduce the same tokens; stochastic ones resample).
 """
 from __future__ import annotations
 
@@ -64,6 +70,8 @@ class Sequence:
     position: int = 0               # next cache index the decode step writes
     next_token: int = 0             # input token for the next decode step
     generated: List[int] = dataclasses.field(default_factory=list)
+    admit_seq: int = -1             # admission order (preemption priority)
+    preemptions: int = 0
     # timing (stream-relative seconds)
     t_admitted: float = 0.0
     t_first_token: Optional[float] = None
@@ -93,6 +101,19 @@ class Sequence:
     def start_decode(self) -> None:
         assert self.state is SeqState.PREFILL
         self.state = SeqState.DECODE
+
+    def preempt(self) -> None:
+        """Recompute-preemption: back to QUEUED, progress discarded (the
+        KV blocks backing it are reclaimed, so generation restarts from
+        the prompt on re-admission)."""
+        assert self.state in (SeqState.PREFILL, SeqState.DECODE)
+        self.state = SeqState.QUEUED
+        self.slot = None
+        self.position = 0
+        self.next_token = 0
+        self.generated = []
+        self.t_first_token = None
+        self.preemptions += 1
 
     def record_token(self, token: int, now: float) -> None:
         assert self.state is SeqState.DECODE

@@ -1,22 +1,31 @@
 """Admission + batching policy for the continuous-batching engine.
 
-FCFS over arrived requests, packing into whatever KV-arena slots are free.
-The scheduler owns the queue and the sequence registry; the arena owns the
-storage; the engine step executor only ever sees (token, position, active)
-vectors over the fixed slot axis — so admissions and completions never
-change a traced shape.
+FCFS over arrived requests, packing into whatever KV-arena capacity is
+free. The scheduler owns the queue and the sequence registry; the arena
+owns the storage; the engine step executor only ever sees (token,
+position, active) vectors over the fixed slot axis — so admissions and
+completions never change a traced shape.
 
 Admission gates:
   * arrival time — a request joins the queue only once its ``arrival_s``
     has passed (request-stream replay);
-  * slot availability — one free arena slot per admitted request;
+  * capacity — the engine's ``admit_fn(seq)`` returns a slot only when the
+    arena can host the sequence (a free slot for the contiguous arena; a
+    free slot AND ``ceil(prompt/block_size)`` free blocks for the paged
+    arena). FCFS is strict: a refused head-of-queue blocks later arrivals
+    rather than being skipped.
   * sequence budget — prompt_len + max_new_tokens must fit max_seq.
+
+Preemption (paged arena only): when decode crosses a block boundary and
+the allocator is exhausted, the engine preempts the *youngest* admitted
+sequence — its blocks are reclaimed and it re-enters the queue head, so
+age order is preserved and the oldest sequence always finishes.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.runtime.request import Request, SeqState, Sequence
 
@@ -25,8 +34,10 @@ from repro.runtime.request import Request, SeqState, Sequence
 class SchedulerStats:
     admitted: int = 0
     completed: int = 0
+    preemptions: int = 0            # paged arena: preempt-to-queue events
     slot_reuses: int = 0            # admissions into a previously used slot
     occupancy_sum: float = 0.0      # sum over steps of active-slot count
+    max_occupancy: int = 0          # peak concurrent sequences
     steps: int = 0
 
     @property
@@ -43,6 +54,7 @@ class Scheduler:
         self.active: Dict[int, Sequence] = {}       # slot -> sequence
         self.finished: List[Sequence] = []
         self._ever_used: set = set()
+        self._admit_counter = 0
         self.stats = SchedulerStats()
 
     # -- submission ------------------------------------------------------
@@ -63,17 +75,21 @@ class Scheduler:
         while self.pending and self.pending[0].req.arrival_s <= now:
             self.queue.append(self.pending.popleft())
 
-    def admit(self, slot_alloc, now: float) -> List[Sequence]:
-        """Admit queued sequences while ``slot_alloc()`` yields free slots.
-        Returns the newly admitted sequences (state PREFILL, slot set)."""
+    def admit(self, admit_fn: Callable[[Sequence], Optional[int]],
+              now: float) -> List[Sequence]:
+        """Admit queued sequences while ``admit_fn(seq)`` yields slots
+        (None = arena refused: stop, strict FCFS). Returns the newly
+        admitted sequences (state PREFILL, slot set)."""
         self.poll_arrivals(now)
         admitted: List[Sequence] = []
         while self.queue:
-            slot = slot_alloc()
+            slot = admit_fn(self.queue[0])
             if slot is None:
                 break
             seq = self.queue.popleft()
             seq.admit(slot, now)
+            seq.admit_seq = self._admit_counter
+            self._admit_counter += 1
             self.active[slot] = seq
             if slot in self._ever_used:
                 self.stats.slot_reuses += 1
@@ -86,6 +102,8 @@ class Scheduler:
     def record_step(self) -> None:
         self.stats.steps += 1
         self.stats.occupancy_sum += len(self.active)
+        self.stats.max_occupancy = max(self.stats.max_occupancy,
+                                       len(self.active))
 
     def retire(self, slot_free) -> List[Sequence]:
         """Collect DONE sequences, freeing their slots via ``slot_free``."""
@@ -96,6 +114,27 @@ class Scheduler:
             self.finished.append(seq)
             self.stats.completed += 1
         return done
+
+    def preempt(self, seq: Sequence) -> int:
+        """Evict an active sequence back to the *head* of the queue
+        (recompute-preemption). Returns the freed slot id; the caller
+        releases the arena resources. Head insertion keeps age priority:
+        preempted (younger) sequences re-admit before later arrivals, and
+        repeated preemption of youngest-first restores age order."""
+        slot = seq.slot
+        del self.active[slot]
+        seq.preempt()
+        self.queue.appendleft(seq)
+        self.stats.preemptions += 1
+        return slot
+
+    def preempt_victim(self) -> Optional[Sequence]:
+        """Youngest active sequence (latest admission) — the standard
+        recompute-preemption victim: oldest work is never discarded, so
+        the run always makes progress."""
+        if not self.active:
+            return None
+        return max(self.active.values(), key=lambda s: s.admit_seq)
 
     # -- state queries ----------------------------------------------------
     @property

@@ -14,8 +14,14 @@ of a generation to a (phase, category, direction) cell:
              outs    — kernel result drain, d2h
              sampled — sampled token ids, d2h (fused device sampling), or
              logits  — full logit rows, d2h (llama.cpp-style host sampling)
+             tables  — paged-arena block-table uploads, h2d (charged only
+                       when the tables actually changed: admission, block
+                       growth, preemption — not per step)
              kv_arena— device-resident cache growth (informational; not a
-                       host<->device transfer)
+                       host<->device transfer). Slot arena: token-granular
+                       per decode step; paged arena: block-granular at
+                       reservation time (admission + boundary crossings),
+                       so bytes-resident tracks actual block occupancy
   direction  h2d | d2h | dev
 
 Kernel-byte math comes from `core/offload.py`'s ``KernelCall`` accounting

@@ -1,0 +1,156 @@
+"""Randomized request-stream fuzzing of the scheduler state machine.
+
+Model-free: the driver stands in for the step executor (admission via a
+mock slot pool, one ``record_token`` per active sequence per step) so
+thousands of stream shapes run in milliseconds. Invariants checked on
+every stream:
+
+  * no slot leak — every slot returns to the pool, registry drains;
+  * FCFS — first admissions happen in arrival order (strict head-of-line);
+  * liveness — every submitted request finishes (or was rejected upfront
+    by the sequence-budget gate);
+  * accounting — occupancy stats match an independent event log.
+
+Runs under hypothesis when available; a deterministic numpy-seeded sweep
+covers the same driver otherwise (CI installs hypothesis, the baked
+container may not).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.request import Request
+from repro.runtime.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+MAX_SEQ = 32
+
+
+def build_requests(rng: np.random.RandomState, n: int):
+    """Random stream: some requests deliberately violate the sequence
+    budget (prompt + gen > MAX_SEQ) to exercise upfront rejection."""
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.05))
+        L = int(rng.randint(2, 12))
+        gen = int(rng.randint(1, 8))
+        if rng.rand() < 0.1:                  # budget violator
+            gen = MAX_SEQ
+        reqs.append(Request(rid=i, tokens=np.arange(L) % 7,
+                            max_new_tokens=gen, arrival_s=t))
+    return reqs
+
+
+def drive_stream(num_slots: int, reqs, preempt_period: int = 0):
+    """Replay a stream against the real Scheduler with a mock slot pool.
+    ``preempt_period``: every Nth step evict the scheduler's chosen victim
+    (recompute-preemption path). Returns (sched, log dict)."""
+    sched = Scheduler(num_slots, MAX_SEQ)
+    rejected = []
+    for r in reqs:
+        try:
+            sched.submit(r)
+        except ValueError:
+            rejected.append(r.rid)
+    slots = list(range(num_slots - 1, -1, -1))
+    first_admissions = []
+    occupancy_log = []
+    t, iters = 0.0, 0
+    while sched.has_work:
+        iters += 1
+        assert iters < 10_000, "scheduler livelocked"
+        admitted = sched.admit(lambda seq: slots.pop() if slots else None, t)
+        for s in admitted:
+            if s.preemptions == 0:
+                first_admissions.append(s.rid)
+            s.start_decode()
+        if preempt_period and sched.stats.steps % preempt_period == 1 \
+                and len(sched.active) > 1:
+            victim = sched.preempt_victim()
+            slots.append(sched.preempt(victim))
+        if sched.active:
+            for s in list(sched.active.values()):
+                s.record_token(1, t)
+            sched.record_step()
+            occupancy_log.append(len(sched.active))
+            sched.retire(slots.append)
+        else:
+            nxt = sched.next_arrival()
+            if nxt is not None:
+                t = max(t, nxt)
+            elif not sched.queue:
+                break
+        t += 1e-3
+    return sched, dict(slots=slots, first_admissions=first_admissions,
+                       occupancy_log=occupancy_log, rejected=rejected,
+                       n=len(reqs))
+
+
+def check_invariants(sched: Scheduler, log: dict, num_slots: int):
+    # liveness: every submitted request finished; rejects never entered
+    assert sched.stats.completed == log["n"] - len(log["rejected"])
+    assert not sched.active and not sched.queue and not sched.pending
+    finished_rids = {s.rid for s in sched.finished}
+    assert finished_rids.isdisjoint(log["rejected"])
+    # no slot leak, no duplicate slots in the pool
+    assert sorted(log["slots"]) == list(range(num_slots))
+    # FCFS: first admissions in arrival (== rid) order
+    assert log["first_admissions"] == sorted(log["first_admissions"])
+    # occupancy accounting vs the independent event log
+    assert sched.stats.steps == len(log["occupancy_log"])
+    assert sched.stats.occupancy_sum == sum(log["occupancy_log"])
+    assert sched.stats.max_occupancy == max(log["occupancy_log"],
+                                            default=0)
+    assert sched.stats.max_occupancy <= num_slots
+    # every finished sequence produced exactly its budget
+    for s in sched.finished:
+        assert s.tokens_out == s.req.max_new_tokens
+
+
+def test_fuzz_streams_deterministic():
+    for seed in range(12):
+        rng = np.random.RandomState(seed)
+        num_slots = int(rng.randint(1, 6))
+        reqs = build_requests(rng, int(rng.randint(1, 20)))
+        preempt = int(rng.randint(0, 4))
+        sched, log = drive_stream(num_slots, reqs, preempt_period=preempt)
+        check_invariants(sched, log, num_slots)
+
+
+def test_preemption_requeues_at_head():
+    """A preempted sequence re-admits before later arrivals (age priority)
+    and still finishes with its full budget."""
+    reqs = [Request(rid=i, tokens=np.arange(4), max_new_tokens=6,
+                    arrival_s=0.0) for i in range(4)]
+    sched, log = drive_stream(num_slots=2, reqs=reqs, preempt_period=2)
+    check_invariants(sched, log, num_slots=2)
+    assert sched.stats.preemptions > 0
+
+
+def test_admission_counts_and_slot_reuse():
+    rng = np.random.RandomState(7)
+    reqs = build_requests(rng, 15)
+    sched, log = drive_stream(num_slots=2, reqs=reqs)
+    check_invariants(sched, log, num_slots=2)
+    # 2 slots, >2 admissions: later admissions reuse freed slots
+    expected_reuses = sched.stats.admitted - min(sched.stats.admitted, 2)
+    assert sched.stats.slot_reuses == expected_reuses
+
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("fuzz", max_examples=60, deadline=None)
+    settings.load_profile("fuzz")
+
+    @given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1),
+           st.integers(0, 20), st.integers(0, 4))
+    def test_fuzz_streams_hypothesis(num_slots, seed, n, preempt_period):
+        rng = np.random.RandomState(seed)
+        reqs = build_requests(rng, n)
+        sched, log = drive_stream(num_slots, reqs,
+                                  preempt_period=preempt_period)
+        check_invariants(sched, log, num_slots)
