@@ -3,8 +3,15 @@
 Qwen3 {0.6B, 1.7B, 8B} x {q8_0, q3_k_s} x [in:out] in {[8:1],[16:4],[32:16]}
 on IMAX FPGA (measured-equivalent analytical), IMAX 28nm projection, and the
 three GPU platforms (TDP+roofline device models).
+
+``--reduced`` restricts the grid to the smallest model x one quant (the
+CI benchmark-regression leg — analytic, so the numbers are deterministic
+and gateable); ``--json PATH`` writes them for the regression check.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 from benchmarks.common import emit
 from repro.analysis.power import DEVICE_POWER, gpu_metrics
@@ -33,10 +40,24 @@ def bytes_per_token(cfg, quant: str, n_in: int, n_out: int) -> float:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="smallest model x q8_0 only (CI regression leg)")
+    ap.add_argument("--json", default="",
+                    help="write the regression-gate metrics JSON here")
+    args = ap.parse_args()
     fpga = fpga_prototype()
     asic = asic_28nm()
-    for mname, cfg in PAPER_MODELS.items():
-        for quant in QUANTS:
+    metrics = {}
+    models = PAPER_MODELS
+    quants = QUANTS
+    if args.reduced:
+        first = min(PAPER_MODELS,
+                    key=lambda m: PAPER_MODELS[m].param_counts()["total"])
+        models = {first: PAPER_MODELS[first]}
+        quants = ["q8_0"]
+    for mname, cfg in models.items():
+        for quant in quants:
             for n_in, n_out in WORKLOADS:
                 wl = f"{mname}-{quant}-[{n_in}:{n_out}]"
                 rf = fpga.e2e(cfg, quant, n_in, n_out)
@@ -55,6 +76,13 @@ def main() -> None:
                     emit(f"e2e_latency/{dev_id}/{wl}",
                          g["latency_s"] * 1e6,
                          f"latency_s={g['latency_s']:.3f}")
+                metrics[f"latency_28nm_s/{wl}"] = ra["latency_s"]
+                metrics[f"bytes_per_token/{wl}"] = bpt
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "bench_e2e_latency",
+                       "metrics": metrics}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Continuous-batching serving benchmark: throughput vs batch occupancy,
-and the paging win measured at equal arena bytes.
+the paging win at equal arena bytes, and the chunked-prefill transfer win
+at equal workload.
 
 Part 1 replays the same request stream through the slot-arena engine at
 several arena sizes and reports decode throughput, mean occupancy,
@@ -11,14 +12,24 @@ Part 2 holds the KV **storage bytes fixed** and compares the
 whole-sequence slot arena against the paged block-table arena on a
 short-request stream: max concurrent sequences, bytes *resident* per
 live cache token, preemptions, and decode-step compiles (paging must not
-re-jit). This is the serving-density lever: a slot pins ``max_seq``
-tokens of cache for its whole lifetime, a block table pins
-``ceil(len/block)`` blocks.
+re-jit).
+
+Part 3 holds the **workload fixed** and compares the unified
+chunked-prefill step against the legacy bucketed-prefill path: prefill
+bytes/token (no pow2 padding, co-prefilling slots share one weight
+pass) and total bytes/token (the per-step shared weight stream replaces
+bucketed's per-slot restream), with token-for-token identical outputs
+and ``step_compiles == 1`` across the mixed-length stream.
 
 Runs on the reduced model (CPU-friendly); the analytic full-size numbers
-live in bench_e2e_latency.py.
+live in bench_e2e_latency.py. ``--json PATH`` writes the CI benchmark-
+regression metrics (see .github/workflows/ci.yml and
+benchmarks/check_bench_regression.py).
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import numpy as np
@@ -34,6 +45,7 @@ N_REQUESTS = 8
 GEN = 8
 PROMPT_MAX = 16
 SLOT_SWEEP = (1, 2, 4, 8)
+CHUNK = 16          # >= PROMPT_MAX: every prompt ingests in one shared step
 
 # Equal-bytes paging comparison: contiguous 2 slots x 32 tokens vs paged
 # 8 blocks x 8 tokens (block_size == max_seq/4) with 8 slot lanes.
@@ -41,6 +53,8 @@ PAGED_MAX_SEQ = 32
 PAGED_BLOCK = 8
 CONT_SLOTS = 2
 PAGED_SLOTS = 8
+
+METRICS = {}
 
 
 def make_requests(cfg, rng: np.random.RandomState, n=N_REQUESTS,
@@ -56,7 +70,7 @@ def make_requests(cfg, rng: np.random.RandomState, n=N_REQUESTS,
 def occupancy_sweep(cfg, model, params) -> None:
     for slots in SLOT_SWEEP:
         engine = ServingEngine(model, params, num_slots=slots,
-                               max_seq=PROMPT_MAX + GEN)
+                               max_seq=PROMPT_MAX + GEN, chunk_size=CHUNK)
         reqs = make_requests(cfg, np.random.RandomState(0))
         report = engine.serve(reqs, seed=0)
         st = report.stats
@@ -69,6 +83,10 @@ def occupancy_sweep(cfg, model, params) -> None:
              f"p50_ms={pct[50]*1e3:.0f} p99_ms={pct[99]*1e3:.0f} "
              f"bytes_per_tok_MB={report.transfers.bytes_per_token/1e6:.3f} "
              f"step_compiles={report.step_compiles}")
+        if slots == 4:
+            METRICS["p50_latency_s"] = pct[50]
+            METRICS["throughput_tok_s"] = report.throughput_tok_s
+            METRICS["step_compiles"] = report.step_compiles
 
 
 def paging_comparison(cfg, model, params) -> None:
@@ -80,11 +98,12 @@ def paging_comparison(cfg, model, params) -> None:
     num_blocks = CONT_SLOTS * PAGED_MAX_SEQ // PAGED_BLOCK - 1  # -1: null pg
     runs = {
         "contiguous": ServingEngine(model, params, num_slots=CONT_SLOTS,
-                                    max_seq=PAGED_MAX_SEQ),
+                                    max_seq=PAGED_MAX_SEQ,
+                                    chunk_size=CHUNK),
         "paged": ServingEngine(model, params, num_slots=PAGED_SLOTS,
                                max_seq=PAGED_MAX_SEQ,
                                block_size=PAGED_BLOCK,
-                               num_blocks=num_blocks),
+                               num_blocks=num_blocks, chunk_size=CHUNK),
     }
     assert runs["paged"].arena.nbytes() == runs["contiguous"].arena.nbytes()
     results = {}
@@ -106,14 +125,65 @@ def paging_comparison(cfg, model, params) -> None:
          f"paged={results['paged'].sched.max_occupancy} "
          f"contiguous={results['contiguous'].sched.max_occupancy} "
          f"(acceptance: >= 2x at block_size <= max_seq/4)")
+    METRICS["equal_bytes_concurrency_gain"] = ratio
+
+
+def chunked_comparison(cfg, model, params) -> None:
+    """Equal-workload chunked vs bucketed: the ISSUE acceptance metric.
+    Same request stream, same greedy tokens — only the prefill execution
+    (and therefore the ledger) differs."""
+    mk = lambda: make_requests(cfg, np.random.RandomState(5), lo=5)
+    runs = {}
+    for name, kw in (("bucketed", dict(prefill_mode="bucketed")),
+                     ("chunked", dict(chunk_size=CHUNK))):
+        engine = ServingEngine(model, params, num_slots=4,
+                               max_seq=PROMPT_MAX + GEN, **kw)
+        runs[name] = engine.serve(mk(), seed=0, realtime=False)
+    rb, rc = runs["bucketed"], runs["chunked"]
+    for a, b in zip(rb.sequences, rc.sequences):
+        assert a.generated == b.generated, \
+            f"request {a.rid} diverged between prefill modes"
+    for name, rep in runs.items():
+        led = rep.ledger
+        pre_tok = max(led.tokens["prefill"], 1)
+        pre_bpt = rep.transfers.phase_totals["prefill"]["h2d"] / pre_tok
+        emit(f"serving/{ARCH}/prefill_{name}/bytes_per_token",
+             rep.transfers.bytes_per_token,
+             f"prefill_h2d_per_prompt_tok={pre_bpt:.0f} "
+             f"prefill_tokens={led.tokens['prefill']} "
+             f"step_compiles={rep.step_compiles}")
+    pre = lambda r: r.transfers.phase_totals["prefill"]["h2d"]
+    METRICS["bytes_per_token"] = rc.transfers.bytes_per_token
+    METRICS["prefill_h2d_bytes"] = pre(rc)
+    METRICS["chunked_vs_bucketed_bytes_ratio"] = \
+        rc.transfers.bytes_per_token / rb.transfers.bytes_per_token
+    METRICS["chunked_vs_bucketed_prefill_ratio"] = pre(rc) / pre(rb)
+    METRICS["chunked_step_compiles"] = rc.step_compiles
+    emit(f"serving/{ARCH}/chunked_vs_bucketed/bytes_ratio",
+         METRICS["chunked_vs_bucketed_bytes_ratio"],
+         f"prefill_ratio={METRICS['chunked_vs_bucketed_prefill_ratio']:.3f} "
+         f"(acceptance: both < 1.0; tokens identical)")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced model config (always on: this benchmark "
+                         "is CPU-sized by construction)")
+    ap.add_argument("--json", default="",
+                    help="write the regression-gate metrics JSON here")
+    args = ap.parse_args()
     cfg = ASSIGNED[ARCH].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     occupancy_sweep(cfg, model, params)
     paging_comparison(cfg, model, params)
+    chunked_comparison(cfg, model, params)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "bench_serving", "arch": f"{ARCH}-reduced",
+                       "metrics": METRICS}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

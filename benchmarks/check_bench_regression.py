@@ -1,0 +1,101 @@
+"""CI benchmark-regression gate.
+
+Compares a freshly measured benchmark JSON (``--json`` output of
+bench_serving.py / bench_e2e_latency.py) against a committed baseline and
+fails (exit 1) when any gated metric regresses beyond its tolerance.
+
+    python benchmarks/check_bench_regression.py CURRENT.json BASELINE.json
+
+Baseline format — per metric either a bare number (shorthand: lower is
+better, 10% tolerance) or an object:
+
+    {"metrics": {
+        "bytes_per_token": {"value": 884943.0, "max_regress_pct": 10},
+        "p50_latency_s":   {"value": 0.061, "max_regress_pct": 75,
+                            "note": "wall clock: runner-speed headroom"},
+        "equal_bytes_concurrency_gain": {"value": 3.5, "direction":
+                            "higher", "max_regress_pct": 10}}}
+
+Deterministic ledger/model metrics carry the tight 10% gate (these are
+what an accidental re-introduction of pow2 padding or per-slot weight
+restreaming would move); wall-clock metrics get explicit headroom in the
+baseline because CI runner speed is not the thing under test. A metric
+present in the baseline but missing from the current run is a failure —
+silently dropping a gated metric must not pass.
+
+Refresh a baseline deliberately by re-running the bench with ``--json``
+and copying the values in (see benchmarks/baselines/README.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_metrics(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return data.get("metrics", data)
+
+
+def norm_spec(spec) -> dict:
+    if isinstance(spec, dict):
+        return {"value": float(spec["value"]),
+                "max_regress_pct": float(spec.get("max_regress_pct", 10.0)),
+                "direction": spec.get("direction", "lower")}
+    return {"value": float(spec), "max_regress_pct": 10.0,
+            "direction": "lower"}
+
+
+def check(current: dict, baseline: dict):
+    """Returns (rows, failures). A row: (name, base, cur, limit, ok)."""
+    rows, failures = [], []
+    for name, raw in sorted(baseline.items()):
+        spec = norm_spec(raw)
+        base, pct = spec["value"], spec["max_regress_pct"]
+        if name not in current:
+            rows.append((name, base, None, None, False))
+            failures.append(f"{name}: missing from current run")
+            continue
+        cur = float(current[name])
+        if spec["direction"] == "higher":
+            limit = base * (1.0 - pct / 100.0)
+            ok = cur >= limit
+        else:
+            limit = base * (1.0 + pct / 100.0)
+            ok = cur <= limit
+        rows.append((name, base, cur, limit, ok))
+        if not ok:
+            failures.append(
+                f"{name}: {cur:.6g} regressed past {limit:.6g} "
+                f"(baseline {base:.6g}, tol {pct:.0f}%, "
+                f"{spec['direction']} is better)")
+    return rows, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh bench JSON (--json output)")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    args = ap.parse_args()
+    current = load_metrics(args.current)
+    baseline = load_metrics(args.baseline)
+    rows, failures = check(current, baseline)
+    width = max((len(r[0]) for r in rows), default=10)
+    for name, base, cur, limit, ok in rows:
+        cur_s = f"{cur:.6g}" if cur is not None else "MISSING"
+        lim_s = f"{limit:.6g}" if limit is not None else "-"
+        print(f"{'PASS' if ok else 'FAIL'}  {name:<{width}}  "
+              f"base={base:.6g}  cur={cur_s}  limit={lim_s}")
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,8 +9,16 @@ measured live instead of modeled):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --quant q8_0 --requests 8 --slots 4 --arrival poisson --rate 4
 
+Prompts stream through the unified chunked-prefill step by default
+(``--chunk-size`` tokens per slot per iteration, one traced shape, no
+pow2 padding); ``--prefill-mode bucketed`` keeps the legacy padded
+prefill pass for one release:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
+      --chunk-size 4              # unified step, 4-token prompt chunks
+
 Paged KV arena (block-table allocation: admit on free blocks, grow
-tables across block boundaries, preempt-to-queue on exhaustion):
+tables with chunk progress, preempt-to-queue on exhaustion):
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
       --slots 8 --block-size 8 --num-blocks 16
@@ -95,6 +103,7 @@ def run_stream(cfg, model, params, args) -> None:
     engine = ServingEngine(
         model, params, quant=args.quant, num_slots=args.slots,
         max_seq=max_seq, offload_decisions=decisions,
+        prefill_mode=args.prefill_mode, chunk_size=args.chunk_size,
         block_size=args.block_size or None, num_blocks=args.num_blocks
         or None, host_sampling=args.host_sampling)
 
@@ -105,13 +114,20 @@ def run_stream(cfg, model, params, args) -> None:
     if engine.paged:
         arena_desc += (f" paged[{engine.arena.num_blocks}x"
                        f"{engine.arena.block_size}]")
+    mode_desc = f"chunked[{engine.chunk_size}]" if engine.chunked \
+        else "bucketed"
     print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
-          f"({args.arrival}) {arena_desc} gen={args.gen}")
+          f"({args.arrival}) {arena_desc} prefill={mode_desc} "
+          f"gen={args.gen}")
     print(f"  completed {report.sched.completed}/{args.requests} | "
           f"slot reuses {report.sched.slot_reuses} | "
           f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} "
           f"(max {report.sched.max_occupancy}) | "
-          f"decode-step compiles {report.step_compiles}")
+          f"step compiles {report.step_compiles}")
+    if engine.chunked:
+        print(f"  chunk scheduling: {report.sched.prefill_chunks} prompt "
+              f"chunks | {report.sched.deferred_feeds} budget-deferred "
+              f"feeds | {st.prefill_tokens} prompt tokens streamed")
     if engine.paged:
         print(f"  paged arena: block reissues "
               f"{engine.arena.allocator.reissues} | preemptions "
@@ -162,6 +178,14 @@ def main() -> None:
     ap.add_argument("--quant", default="none",
                     choices=["none", "fp16", "q8_0", "q3_k_s", "q6_k"])
     ap.add_argument("--mode", default="stream", choices=["stream", "batch"])
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "bucketed"],
+                    help="chunked (default): prompts stream through the "
+                         "unified decode step; bucketed: legacy pow2-"
+                         "padded prefill pass (one release of support)")
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="chunked prefill: prompt tokens per slot per "
+                         "unified step (the step's traced width)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=2,

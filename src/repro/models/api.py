@@ -27,6 +27,9 @@ class ModelAPI:
     prefill: Callable                 # (params, batch, **opts) -> (logits, cache)
     decode_step: Callable             # (params, token, position, cache, **o)
     cache_shapes: Callable            # (batch, seq) -> shape pytree
+    # encdec only: admission-time encoder pass for chunked prefill —
+    # (params, frames, **opts) -> cache pytree (cross KV + self stubs).
+    encode_cross: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     def abstract_params(self, quant: str = "none"):
@@ -96,6 +99,36 @@ class ModelAPI:
                                   is_leaf=lambda x: isinstance(x, tuple)),
         }
 
+    def chunked_step_specs(self, num_slots: int, chunk: int, max_seq: int,
+                           dtype=jnp.bfloat16,
+                           block_size: Optional[int] = None,
+                           num_blocks: Optional[int] = None) -> Dict:
+        """Entry ShapeDtypeStructs for the *unified* chunked-prefill step:
+        ONE traced shape (num_slots, chunk) covers prompt ingestion AND
+        generation — per-slot base positions + valid-entry counts replace
+        the separate bucketed prefill entry point. Paged mode adds the
+        block tables; vlm adds the stub patch-embedding override."""
+        i32 = jnp.int32
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((num_slots, chunk), i32),
+            "positions": jax.ShapeDtypeStruct((num_slots,), i32),
+            "lengths": jax.ShapeDtypeStruct((num_slots,), i32),
+            "active": jax.ShapeDtypeStruct((num_slots,), jnp.bool_),
+        }
+        if block_size is not None:
+            paged = self.paged_decode_specs(num_slots, num_blocks,
+                                            block_size, max_seq, dtype)
+            specs["block_tables"] = paged["block_tables"]
+            specs["cache"] = paged["cache"]
+        else:
+            specs["cache"] = self.cache_specs(num_slots, max_seq, dtype)
+        if self.cfg.family == "vlm":
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (num_slots, chunk, self.cfg.d_model), dtype)
+            specs["embeds_mask"] = jax.ShapeDtypeStruct(
+                (num_slots, chunk), jnp.bool_)
+        return specs
+
     def slot_decode_specs(self, num_slots: int, max_seq: int,
                           dtype=jnp.bfloat16) -> Dict:
         """Entry ShapeDtypeStructs for the serving engine's slot-batched
@@ -159,6 +192,9 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
                                           cache, **_drop_chunk(
                                               _drop_remat(_strip(kw)))),
             cache_shapes=functools.partial(encdec.encdec_cache_shapes, cfg),
+            encode_cross=lambda params, frames, **kw:
+                encdec.encdec_encode_cross(params, cfg, frames,
+                                           **_drop_remat(_strip(kw))),
         )
     return ModelAPI(
         cfg=cfg,

@@ -2,12 +2,16 @@
 
 Prefill/train paths use memory-efficient chunked attention (pure-jnp online
 softmax — the XLA-lowered twin of the Pallas flash kernel, required for 32k
-sequences); decode paths attend one query against the KV cache.
+sequences); decode paths attend a *chunk* of C consecutive queries against
+the KV cache (C == 1 is the classic one-token step; C > 1 is the unified
+chunked-prefill step, with in-chunk causality as a per-query kv_len mask).
 
 Decode steps take either a *scalar* position (lockstep batch: one
-``dynamic_update_slice`` per cache) or a *(B,)* position vector (the
+``dynamic_update_slice`` per cache) or a *(B,)* base-position vector (the
 continuous-batching serving engine, where every KV-arena slot sits at its
-own depth: per-slot vmapped single-token writes + per-slot length masks).
+own depth — chunk entry i lands at base + i). With ``lengths`` (B,), rows
+write only their first ``lengths[b]`` chunk entries; the invalid tail is
+routed out of range and dropped by the scatter, never garbage-written.
 
 KV caches:
   GQA:  {"k": (B, S, Hkv, D), "v": (B, S, Hkv, D)}
@@ -107,39 +111,55 @@ def position_vector(position, batch: int) -> jnp.ndarray:
     return p.reshape(batch, 1)
 
 
+def query_lengths(kv_len, batch: int, width: int) -> Optional[jnp.ndarray]:
+    """Normalize a valid-KV-length spec — None, scalar, (B,) per-slot, or
+    (B, C) per-query — to a (B, C) int matrix (or None = no masking)."""
+    if kv_len is None:
+        return None
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        return jnp.broadcast_to(kv_len, (batch, width))
+    if kv_len.ndim == 1:
+        return jnp.broadcast_to(kv_len[:, None], (batch, width))
+    return kv_len
+
+
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                      sm_scale: float, kv_len=None) -> jnp.ndarray:
-    """Single-token decode: q (B, 1, H, D) vs cache k/v (B, S, Hkv, D).
-    ``kv_len``: scalar or (B,) valid length for masking the padded tail.
+    """Decode-side attention: q (B, C, H, D) vs cache k/v (B, S, Hkv, D).
+    C == 1 is the classic one-token step; C > 1 is a *chunk* of C
+    consecutive queries (unified chunked-prefill step). ``kv_len``:
+    scalar, (B,) or (B, C) valid length per query — a chunk passes the
+    per-query causal depth ``pos0 + i + 1`` so in-chunk causality is a
+    mask, never a shape change.
 
     With ``flags.mixed_intermediates()`` the KV cache is contracted in its
     stored bf16 dtype (f32 accumulation via preferred_element_type) — no
     f32 copy of the cache is ever materialized, halving decode's dominant
     HBM traffic."""
-    b, _, h, d = q.shape
+    b, c, h, d = q.shape
     _, s, hkv, _ = k.shape
     group = h // hkv
     if flags.mixed_intermediates():
-        qg = q.astype(k.dtype).reshape(b, hkv, group, d)
-        sc = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+        qg = q.astype(k.dtype).reshape(b, c, hkv, group, d)
+        sc = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
                         preferred_element_type=jnp.float32) * sm_scale
     else:
-        qg = q.astype(jnp.float32).reshape(b, hkv, group, d)
-        sc = jnp.einsum("bhgd,bshd->bhgs", qg,
+        qg = q.astype(jnp.float32).reshape(b, c, hkv, group, d)
+        sc = jnp.einsum("bqhgd,bshd->bhgqs", qg,
                         k.astype(jnp.float32)) * sm_scale
-    if kv_len is not None:
-        kv_len = jnp.asarray(kv_len)
-        if kv_len.ndim:                                  # per-slot lengths
-            kv_len = kv_len.reshape(b, 1, 1, 1)
-        mask = jnp.arange(s)[None, None, None, :] < kv_len
+    lens = query_lengths(kv_len, b, c)
+    if lens is not None:                        # (B, C) -> (B,1,1,C,1)
+        mask = jnp.arange(s)[None, None, None, None, :] \
+            < lens[:, None, None, :, None]
         sc = jnp.where(mask, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     if flags.mixed_intermediates():
-        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+        o = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v,
                        preferred_element_type=jnp.float32)
     else:
-        o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
-    return o.reshape(b, 1, h, d).astype(q.dtype)
+        o = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, c, h, d).astype(q.dtype)
 
 
 # ----------------------------------------------------------------------
@@ -228,38 +248,63 @@ def gqa_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 
 def _insert_kv(cache_arr: jnp.ndarray, new: jnp.ndarray,
-               position) -> jnp.ndarray:
-    """Write (B, 1, ...) ``new`` into (B, S, ...) cache at ``position`` —
-    a scalar (lockstep batch) or a (B,) vector (per-slot arena depths)."""
+               position, lengths=None) -> jnp.ndarray:
+    """Write (B, C, ...) ``new`` into (B, S, ...) cache.
+
+    C == 1, ``lengths`` None: classic one-token insert at ``position`` —
+    a scalar (lockstep batch) or a (B,) vector (per-slot arena depths).
+
+    Chunk insert (``lengths`` given, or C > 1): ``position`` is the (B,)
+    base index; row b writes its first ``lengths[b]`` chunk entries at
+    ``position[b] + i``. Invalid tail entries are routed out of range and
+    *dropped* by the scatter — no garbage ever lands in the cache (unlike
+    bucket padding, which relied on rewrite-before-use)."""
     p = jnp.asarray(position)
     new = new.astype(cache_arr.dtype)
-    if p.ndim == 0:
-        start = (0, p) + (0,) * (cache_arr.ndim - 2)
-        return jax.lax.dynamic_update_slice(cache_arr, new, start)
+    b, c = new.shape[:2]
+    if lengths is None and c == 1:
+        if p.ndim == 0:
+            start = (0, p) + (0,) * (cache_arr.ndim - 2)
+            return jax.lax.dynamic_update_slice(cache_arr, new, start)
 
-    def one(c, n, pi):                                   # c: (S, ...)
-        return jax.lax.dynamic_update_slice(
-            c, n, (pi,) + (0,) * (c.ndim - 1))
-    return jax.vmap(one)(cache_arr, new, p)
+        def one(cc, n, pi):                              # cc: (S, ...)
+            return jax.lax.dynamic_update_slice(
+                cc, n, (pi,) + (0,) * (cc.ndim - 1))
+        return jax.vmap(one)(cache_arr, new, p)
+    s = cache_arr.shape[1]
+    idx = jnp.broadcast_to(p, (b,))[:, None] + jnp.arange(c)
+    if lengths is not None:
+        valid = jnp.arange(c)[None, :] < lengths[:, None]
+        idx = jnp.where(valid, idx, s)                   # OOB -> dropped
+    return cache_arr.at[jnp.arange(b)[:, None], idx].set(new, mode="drop")
 
 
 # ----------------------------------------------------------------------
 # Paged cache plumbing (block-table gather/scatter inside the jitted step)
 # ----------------------------------------------------------------------
 def paged_insert_token(pages: jnp.ndarray, new: jnp.ndarray, position,
-                       block_tables: jnp.ndarray) -> jnp.ndarray:
-    """Scatter (B, 1, ...) ``new`` into (NB, bs, ...) ``pages`` at each
-    slot's ``position``, routed through ``block_tables`` (B, max_blocks).
+                       block_tables: jnp.ndarray,
+                       lengths=None) -> jnp.ndarray:
+    """Scatter (B, C, ...) ``new`` into (NB, bs, ...) ``pages`` routed
+    through ``block_tables`` (B, max_blocks). C == 1 with ``lengths`` None
+    is the classic one-token write at ``position``; the chunk form writes
+    row b's first ``lengths[b]`` entries at ``position[b] + i``.
 
     Blocks are uniquely owned by one slot, so active slots never collide;
-    inactive slots' table entries all point at the arena's null block —
-    their (masked, discarded) writes land there harmlessly."""
+    single-token writes from inactive slots land in the arena's null block
+    (their table entries all point there), while chunk writes past a row's
+    valid length are routed out of range and *dropped* by the scatter."""
     bs = pages.shape[1]
-    b = new.shape[0]
-    pos = jnp.broadcast_to(jnp.asarray(position), (b,))
+    b, c = new.shape[:2]
+    pos0 = jnp.broadcast_to(jnp.asarray(position), (b,))
+    pos = pos0[:, None] + jnp.arange(c)                  # (B, C)
     blk = pos // bs
-    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
-    return pages.at[phys, pos % bs].set(new[:, 0].astype(pages.dtype))
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)
+    if lengths is not None:
+        valid = jnp.arange(c)[None, :] < lengths[:, None]
+        phys = jnp.where(valid, phys, pages.shape[0])    # OOB -> dropped
+    return pages.at[phys, pos % bs].set(new.astype(pages.dtype),
+                                        mode="drop")
 
 
 def paged_view(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
@@ -271,40 +316,56 @@ def paged_view(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
     return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
 
 
+def decode_positions(position, batch: int, width: int) -> jnp.ndarray:
+    """(B, C) absolute position matrix for a decode chunk: ``position`` is
+    a scalar or (B,) *base*; chunk entry i sits at base + i. C == 1
+    reduces to the classic per-slot position vector."""
+    p = jnp.asarray(position)
+    base = jnp.broadcast_to(p, (batch,)) if p.ndim == 0 else p.reshape(batch)
+    return base[:, None] + jnp.arange(width)
+
+
 def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                position, cache: Dict, *, fmt: str = "none",
                impl: str = "ref", interpret: bool = True,
                mrope_positions=None, cross: bool = False,
-               block_tables=None):
-    """One-token decode. x: (B, 1, d); ``position``: scalar int32 or (B,);
+               block_tables=None, lengths=None):
+    """Decode step over a chunk of C tokens. x: (B, C, d); ``position``:
+    scalar int32 or (B,) base position (chunk entry i sits at base + i);
     cache {"k","v"}: (B, S, Hkv, D) pre-allocated — or physical pages
     (NB, bs, Hkv, D) when ``block_tables`` (B, max_blocks) is passed.
-    Returns (out, cache).
+    C == 1 is the classic one-token step. Returns (out, cache).
+
+    ``lengths``: (B,) valid entries per row (chunked prefill: a slot may
+    fill only part of the chunk) — writes past a row's length are dropped
+    and its tail outputs are garbage the engine never reads.
 
     ``cross``: whisper cross-attention — attend to a static encoder cache
     without inserting (cross caches stay per-slot, never paged)."""
-    b = x.shape[0]
+    b, cw = x.shape[:2]
     hd = cfg.resolved_head_dim()
-    pos2 = position_vector(position, b)
-    q, k, v = _project_qkv(p, cfg, x, pos2, fmt, impl, interpret,
+    pos_mat = decode_positions(position, b, cw)
+    q, k, v = _project_qkv(p, cfg, x, pos_mat, fmt, impl, interpret,
                            mrope_positions)
     if cross:
         kc, vc = cache["k"], cache["v"]
         kv_len = None
     elif block_tables is not None:
-        kp = paged_insert_token(cache["k"], k, position, block_tables)
-        vp = paged_insert_token(cache["v"], v, position, block_tables)
+        kp = paged_insert_token(cache["k"], k, position, block_tables,
+                                lengths)
+        vp = paged_insert_token(cache["v"], v, position, block_tables,
+                                lengths)
         cache = {"k": kp, "v": vp}
         kc = paged_view(kp, block_tables)
         vc = paged_view(vp, block_tables)
-        kv_len = pos2[:, 0] + 1
+        kv_len = pos_mat + 1                # per-query causal depth
     else:
-        kc = _insert_kv(cache["k"], k, position)
-        vc = _insert_kv(cache["v"], v, position)
+        kc = _insert_kv(cache["k"], k, position, lengths)
+        vc = _insert_kv(cache["v"], v, position, lengths)
         cache = {"k": kc, "v": vc}
-        kv_len = position + 1
+        kv_len = pos_mat + 1 if cw > 1 or lengths is not None else position + 1
     o = decode_attention(q, kc, vc, sm_scale=hd ** -0.5, kv_len=kv_len)
-    o = o.reshape(b, 1, cfg.num_heads * hd)
+    o = o.reshape(b, cw, cfg.num_heads * hd)
     out = layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
     return out, cache
 
@@ -394,31 +455,34 @@ def mla_prefill(p, cfg, x, positions, *, fmt="none", impl="ref",
 
 
 def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
-               interpret=True, block_tables=None):
-    """Absorbed-matmul MLA decode: the kv_b projection is folded into the
-    query/output sides so the compressed cache is attended directly —
-    no (B, S, H, D) expansion ever materializes.
+               interpret=True, block_tables=None, lengths=None):
+    """Absorbed-matmul MLA decode over a chunk of C tokens: the kv_b
+    projection is folded into the query/output sides so the compressed
+    cache is attended directly — no (B, S, H, D) expansion ever
+    materializes. C == 1 is the classic one-token step; ``position`` is
+    the scalar/(B,) base and ``lengths`` the per-row valid count (chunked
+    prefill), masking exactly like the GQA chunk path.
 
     With ``block_tables``, cache leaves are physical pages (NB, bs, ...)
     and the compressed latents are scattered/gathered through the table,
     same contract as the paged GQA path."""
     m = cfg.mla
     h = cfg.num_heads
-    b = x.shape[0]
-    pos2 = position_vector(position, b)
+    b, cw = x.shape[:2]
+    pos_mat = decode_positions(position, b, cw)
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
-        p, cfg, x, pos2, fmt, impl, interpret)
+        p, cfg, x, pos_mat, fmt, impl, interpret)
     if block_tables is not None:
         ckv_p = paged_insert_token(cache["ckv"], ckv_new, position,
-                                   block_tables)
+                                   block_tables, lengths)
         krope_p = paged_insert_token(cache["krope"], krope_new, position,
-                                     block_tables)
+                                     block_tables, lengths)
         cache = {"ckv": ckv_p, "krope": krope_p}
         ckv = paged_view(ckv_p, block_tables)
         krope = paged_view(krope_p, block_tables)
     else:
-        ckv = _insert_kv(cache["ckv"], ckv_new, position)
-        krope = _insert_kv(cache["krope"], krope_new, position)
+        ckv = _insert_kv(cache["ckv"], ckv_new, position, lengths)
+        krope = _insert_kv(cache["krope"], krope_new, position, lengths)
         cache = {"ckv": ckv, "krope": krope}
 
     wkv = layers.linear_dense_weight(p["kv_b"], fmt, dtype=jnp.float32)
@@ -427,33 +491,33 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     wk = wkv[:, :m.qk_nope_head_dim]                    # (h, nope, rank)
     wv = wkv[:, m.qk_nope_head_dim:]                    # (h, v, rank)
 
-    qn = q_nope[:, 0].astype(jnp.float32)               # (b, h, nope)
-    q_eff = jnp.einsum("bhc,hcr->bhr", qn, wk)          # (b, h, rank)
+    qn = q_nope.astype(jnp.float32)                     # (b, q, h, nope)
+    q_eff = jnp.einsum("bqhc,hcr->bqhr", qn, wk)        # (b, q, h, rank)
     if flags.mixed_intermediates():
-        s_nope = jnp.einsum("bhr,bsr->bhs", q_eff.astype(ckv.dtype), ckv,
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(ckv.dtype), ckv,
                             preferred_element_type=jnp.float32)
-        s_rope = jnp.einsum("bhe,bse->bhs",
-                            q_rope[:, 0].astype(krope.dtype), krope,
+        s_rope = jnp.einsum("bqhe,bse->bhqs",
+                            q_rope.astype(krope.dtype), krope,
                             preferred_element_type=jnp.float32)
         ckv_f = ckv
     else:
         ckv_f = ckv.astype(jnp.float32)
-        s_nope = jnp.einsum("bhr,bsr->bhs", q_eff, ckv_f)
-        s_rope = jnp.einsum("bhe,bse->bhs",
-                            q_rope[:, 0].astype(jnp.float32),
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", q_eff, ckv_f)
+        s_rope = jnp.einsum("bqhe,bse->bhqs",
+                            q_rope.astype(jnp.float32),
                             krope.astype(jnp.float32))
     sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    sc = (s_nope + s_rope) * sm
+    sc = (s_nope + s_rope) * sm                         # (b, h, q, s)
     slen = ckv.shape[1]
-    kv_len = jnp.asarray(position) + 1
-    if kv_len.ndim:                                      # per-slot lengths
-        kv_len = kv_len.reshape(b, 1, 1)
-    sc = jnp.where(jnp.arange(slen)[None, None, :] < kv_len, sc, NEG_INF)
-    pr = jax.nn.softmax(sc, axis=-1)                    # (b, h, s)
-    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_f.dtype), ckv_f,
-                     preferred_element_type=jnp.float32)  # (b, h, rank)
-    o = jnp.einsum("bhr,hvr->bhv", ctx, wv)             # (b, h, v_dim)
-    o = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    kv_len = pos_mat + 1                                # per-query depth
+    mask = jnp.arange(slen)[None, None, None, :] \
+        < kv_len[:, None, :, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)                    # (b, h, q, s)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pr.astype(ckv_f.dtype), ckv_f,
+                     preferred_element_type=jnp.float32)  # (b, q, h, rank)
+    o = jnp.einsum("bqhr,hvr->bqhv", ctx, wv)           # (b, q, h, v_dim)
+    o = o.reshape(b, cw, h * m.v_head_dim).astype(x.dtype)
     out = layers.linear_apply(p["o"], o, fmt, impl=impl, interpret=interpret)
     return out, cache
 

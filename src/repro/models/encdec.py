@@ -219,36 +219,66 @@ def encdec_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
     return logits, {"dec_layers": cache}
 
 
+def encdec_encode_cross(params, cfg: ModelConfig, frames, *, quant="none",
+                        impl="ref", interpret=True, kv_chunk=1024):
+    """Admission-time encoder pass for the unified chunked-prefill engine:
+    run the encoder once and project the per-layer cross K/V, returning a
+    cache pytree shaped like ``encdec_cache_shapes`` with the self-KV
+    leaves as minimal (seq=1) zero stubs — the engine scatters it into an
+    arena slot and the decoder prompt then streams through the decode
+    step chunk by chunk (no bucketed decoder prefill pass)."""
+    fmt = layers.recipe_for(quant)["linear"]
+    enc_out = encode(params, cfg, frames, quant=quant, impl=impl,
+                     interpret=interpret, kv_chunk=kv_chunk)
+    b = frames.shape[0]
+    hd = cfg.resolved_head_dim()
+
+    def body(carry, lp):
+        kv = _cross_kv(lp["cross_attn"], cfg, enc_out, fmt, impl, interpret)
+        return carry, {"k": kv[0], "v": kv[1]}
+
+    _, cross = jax.lax.scan(body, None, params["dec_layers"],
+                            unroll=flags.inner_unroll())
+    L = cfg.num_layers
+    zero_self = jnp.zeros((L, b, 1, cfg.num_kv_heads, hd), jnp.bfloat16)
+    return {"dec_layers": {"self": {"k": zero_self, "v": zero_self},
+                           "cross": cross}}
+
+
 def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
                        quant="none", impl="ref", interpret=True,
-                       block_tables=None):
-    """``block_tables``: paged-arena tables for the decoder *self*-attn KV
-    (the cross KV is a constant-size per-slot state — never paged)."""
+                       block_tables=None, lengths=None):
+    """Decode step over a chunk of C tokens (C == 1 classic).
+    ``block_tables``: paged-arena tables for the decoder *self*-attn KV
+    (the cross KV is a constant-size per-slot state — never paged).
+    ``lengths``: (B,) valid chunk entries per row (chunked prefill)."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
-    b = token.shape[0]
+    b, cw = token.shape
     hd = cfg.resolved_head_dim()
     h = layers.embedding_lookup(params["embed"], token, recipe["embed"],
                                 jnp.bfloat16, width=cfg.d_model)
     pe = sinusoid_positions(cfg.max_seq_len, cfg.d_model)
-    # position: scalar or (B,) — gather handles both via a (B,) index.
-    pos_b = jnp.broadcast_to(jnp.asarray(position), (b,))
-    h = h + pe[pos_b][:, None].astype(h.dtype)
+    # position: scalar or (B,) base — chunk entry i sits at base + i
+    # (gather clamps any invalid-tail overrun; those rows are discarded).
+    pos_mat = attn.decode_positions(position, b, cw)
+    h = h + pe[pos_mat].astype(h.dtype)
 
     def body(h, xs):
         lp, lc = xs
         hn = layers.layernorm_apply(lp["self_norm"], h)
         mix, self_cache = attn.gqa_decode(
             lp["self_attn"], cfg, hn, position, lc["self"], fmt=fmt,
-            impl=impl, interpret=interpret, block_tables=block_tables)
+            impl=impl, interpret=interpret, block_tables=block_tables,
+            lengths=lengths)
         h = h + mix
         hn = layers.layernorm_apply(lp["cross_norm"], h)
         q = layers.linear_apply(lp["cross_attn"]["q"], hn, fmt, impl=impl,
                                 interpret=interpret)
-        q = q.reshape(b, 1, cfg.num_heads, hd)
+        q = q.reshape(b, cw, cfg.num_heads, hd)
         o = attn.decode_attention(q, lc["cross"]["k"], lc["cross"]["v"],
                                   sm_scale=hd ** -0.5)
-        o = o.reshape(b, 1, cfg.num_heads * hd)
+        o = o.reshape(b, cw, cfg.num_heads * hd)
         h = h + layers.linear_apply(lp["cross_attn"]["o"], o, fmt, impl=impl,
                                     interpret=interpret)
         hn = layers.layernorm_apply(lp["ffn_norm"], h)

@@ -132,23 +132,28 @@ def layer_prefill(p: Params, cfg: ModelConfig, h, positions, *, mixer, ffn,
 
 def layer_decode(p: Params, cfg: ModelConfig, h, position, cache, *,
                  mixer, ffn, fmt, impl, interpret, mrope_positions=None,
-                 block_tables=None):
-    """One-token layer step. Returns (h, new_cache). ``block_tables``:
+                 block_tables=None, lengths=None):
+    """Decode layer step over a chunk of C tokens (C == 1 is the classic
+    one-token step). Returns (h, new_cache). ``block_tables``:
     paged-arena tables threaded to the attention mixers (SSM states are
-    per-slot constants — paging does not apply)."""
+    per-slot constants — paging does not apply). ``lengths``: (B,) valid
+    chunk entries per row (unified chunked prefill)."""
     hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
     if mixer == "gqa":
         mix, cache = attn.gqa_decode(p["attn"], cfg, hn, position, cache,
                                      fmt=fmt, impl=impl, interpret=interpret,
                                      mrope_positions=mrope_positions,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     lengths=lengths)
     elif mixer == "mla":
         mix, cache = attn.mla_decode(p["attn"], cfg, hn, position, cache,
                                      fmt=fmt, impl=impl, interpret=interpret,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     lengths=lengths)
     else:
         mix, cache = ssm.ssm_decode(p["ssm"], cfg, hn, cache, fmt=fmt,
-                                    impl=impl, interpret=interpret)
+                                    impl=impl, interpret=interpret,
+                                    lengths=lengths)
     h = h + mix
     if ffn != "none":
         hn = layers.rmsnorm_apply(p["ffn_norm"], h, cfg.norm_eps)
@@ -250,8 +255,12 @@ def _embed_inputs(params, cfg: ModelConfig, batch: Dict, quant: str,
     h = layers.embedding_lookup(params["embed"], tokens, recipe["embed"],
                                 dtype, width=cfg.d_model)
     if cfg.family == "vlm" and "vision_embeds" in batch:
-        v = batch["vision_embeds"].shape[1]
-        h = jnp.concatenate([batch["vision_embeds"].astype(dtype),
+        # Clip the vision prefix to the sequence actually being embedded:
+        # a prefill bucket shorter than the vision grid (short prompts)
+        # must not widen the sequence past the position vectors (the
+        # qwen2-vl apply_mrope shape crash).
+        v = min(batch["vision_embeds"].shape[1], s)
+        h = jnp.concatenate([batch["vision_embeds"][:, :v].astype(dtype),
                              h[:, v:]], axis=1)
     return h
 
@@ -370,31 +379,54 @@ def lm_prefill(params, cfg: ModelConfig, batch: Dict, *, quant="none",
     return logits, caches
 
 
+def _mrope_decode_positions(cfg: ModelConfig, pos_mat: jnp.ndarray):
+    """(B, C, 3) M-RoPE positions for absolute positions ``pos_mat``
+    (B, C): vision positions (< vision_tokens) get the (t=0, h, w) raster,
+    text positions advance all three streams together — the same mapping
+    ``_mrope_positions`` applies at prefill, evaluated pointwise so a
+    decode chunk can span the vision/text boundary."""
+    v = cfg.vision_tokens
+    side = max(int(v ** 0.5), 1)
+    is_vis = pos_mat < v
+    txt = pos_mat - v + side
+    t_pos = jnp.where(is_vis, 0, txt)
+    h_pos = jnp.where(is_vis, pos_mat // side, txt)
+    w_pos = jnp.where(is_vis, pos_mat % side, txt)
+    return jnp.stack([t_pos, h_pos, w_pos], axis=-1)
+
+
 def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                    position, cache, *, quant="none", impl="ref",
-                   interpret=True, block_tables=None):
-    """token: (B, 1) int32; position: scalar int32 (lockstep batch) or
-    (B,) int32 (per-slot arena depths); cache from prefill or
-    ``lm_cache_shapes``. Returns (logits (B, 1, V), new_cache).
+                   interpret=True, block_tables=None, lengths=None,
+                   embeds=None, embeds_mask=None):
+    """token: (B, C) int32 — C == 1 is the classic one-token step, C > 1
+    a chunk of consecutive tokens (unified chunked prefill); position:
+    scalar int32 (lockstep batch) or (B,) int32 base positions (per-slot
+    arena depths; chunk entry i sits at base + i); cache from prefill or
+    ``lm_cache_shapes``. Returns (logits (B, C, V), new_cache).
 
     ``block_tables``: (B, max_blocks) int32 — paged-arena mode: attention
     cache leaves are physical pages and K/V are read through a per-slot
-    block-table gather (see ``PagedKVArena``)."""
+    block-table gather (see ``PagedKVArena``).
+
+    ``lengths``: (B,) valid chunk entries per row — cache writes past a
+    row's length are dropped, and its tail logits are garbage by contract
+    (the engine samples at index ``lengths - 1``).
+
+    ``embeds``/``embeds_mask``: (B, C, d) / (B, C) — vlm chunked prefill:
+    positions flagged in the mask take the provided embedding (the stub
+    vision patches) instead of the token embedding."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
-    b = token.shape[0]
+    b, cw = token.shape
     h = layers.embedding_lookup(params["embed"], token, recipe["embed"],
                                 jnp.bfloat16, width=cfg.d_model)
+    if embeds is not None:
+        h = jnp.where(embeds_mask[..., None], embeds.astype(h.dtype), h)
     mrope_pos = None
     if cfg.mrope:
-        # Decode tokens are text: all three M-RoPE streams advance together,
-        # offset by the vision raster (matches _mrope_positions for idx >= V).
-        v = cfg.vision_tokens
-        side = max(int(v ** 0.5), 1)
-        eff = jnp.broadcast_to(jnp.asarray(position), (b,)) \
-            if jnp.ndim(position) == 0 else jnp.asarray(position)
-        eff = eff - v + side
-        mrope_pos = jnp.broadcast_to(eff[:, None, None], (b, 1, 3))
+        pos_mat = attn.decode_positions(position, b, cw)
+        mrope_pos = _mrope_decode_positions(cfg, pos_mat)
     new_caches = {}
     for name, count, subs in layer_groups(cfg):
         def body(h, xs, subs=subs):
@@ -404,7 +436,8 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                                     mixer=subs[0][0], ffn=subs[0][1],
                                     fmt=fmt, impl=impl, interpret=interpret,
                                     mrope_positions=mrope_pos,
-                                    block_tables=block_tables)
+                                    block_tables=block_tables,
+                                    lengths=lengths)
             else:
                 c = {}
                 for i, (mx, ff) in enumerate(subs):
@@ -413,7 +446,8 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                                          fmt=fmt, impl=impl,
                                          interpret=interpret,
                                          mrope_positions=mrope_pos,
-                                         block_tables=block_tables)
+                                         block_tables=block_tables,
+                                         lengths=lengths)
                     c[f"sub{i}"] = ci
             return h, c
         h, new_cache = jax.lax.scan(body, h, (params[name], cache[name]),

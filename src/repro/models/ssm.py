@@ -179,8 +179,16 @@ def ssm_apply(p: Params, cfg: ModelConfig, u: jnp.ndarray, *,
 
 
 def ssm_decode(p: Params, cfg: ModelConfig, u: jnp.ndarray, cache: Dict, *,
-               fmt: str = "none", impl: str = "ref", interpret: bool = True):
-    """One-token recurrent step. u: (B, 1, d); cache {"conv", "ssm"}."""
+               fmt: str = "none", impl: str = "ref", interpret: bool = True,
+               lengths=None):
+    """One-token recurrent step. u: (B, 1, d); cache {"conv", "ssm"}.
+    With u: (B, C, d) (unified chunked-prefill step) the projections run
+    over the whole chunk and the conv/SSM recurrences scan token-by-token,
+    advancing each row's state only for its first ``lengths[b]`` valid
+    entries — tail padding leaves the carried state untouched."""
+    if u.shape[1] > 1 or lengths is not None:
+        return _ssm_decode_chunk(p, cfg, u, cache, fmt=fmt, impl=impl,
+                                 interpret=interpret, lengths=lengths)
     s, d, di, nh, conv_dim = _dims(cfg)
     bsz = u.shape[0]
     zxbcdt = layers.linear_apply(p["in_proj"], u, fmt, impl=impl,
@@ -210,6 +218,73 @@ def ssm_decode(p: Params, cfg: ModelConfig, u: jnp.ndarray, cache: Dict, *,
     out = layers.linear_apply(p["out_proj"], y, fmt, impl=impl,
                               interpret=interpret)
     return out, {"conv": conv_state, "ssm": ssm}
+
+
+def _ssm_decode_chunk(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                      cache: Dict, *, fmt: str, impl: str, interpret: bool,
+                      lengths=None):
+    """Chunk-width recurrent decode: (B, C, d) tokens against carried
+    conv/SSM state. The in/out projections (the offloadable dot products)
+    are batched over the chunk; the sequential recurrence scans the chunk
+    axis one token at a time — per the paper's partitioning the scan is
+    host-side control flow, and C (the serve chunk size) is small.
+
+    ``lengths``: (B,) valid entries per row. A row's state advances only
+    through its valid prefix (padding is tail-only by construction), so a
+    partially-filled chunk leaves exactly the state a shorter exact-width
+    step would have produced."""
+    s, d, di, nh, conv_dim = _dims(cfg)
+    bsz, cw, _ = u.shape
+    zxbcdt = layers.linear_apply(p["in_proj"], u, fmt, impl=impl,
+                                 interpret=interpret)
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc_seq = jnp.concatenate([x, bmat, cmat], axis=-1)   # (B, C, conv_dim)
+    if lengths is None:
+        valid = jnp.ones((bsz, cw), bool)
+    else:
+        valid = jnp.arange(cw)[None, :] < lengths[:, None]
+    a = -jnp.exp(p["A_log"])
+    kconv = p["conv_w"].shape[0]
+
+    def step(carry, inp):
+        conv_st, ssm_st = carry                           # (B,K-1,C),(B,H,N,P)
+        xbc_t, dt_t, ok = inp                             # (B,C),(B,H),(B,)
+        padded = jnp.concatenate([conv_st, xbc_t[:, None]], axis=1)
+        out = jnp.zeros((bsz, conv_dim), jnp.float32)
+        for i in range(kconv):
+            out = out + padded[:, i].astype(jnp.float32) * p["conv_w"][i]
+        out = jax.nn.silu(out + p["conv_b"]).astype(xbc_t.dtype)
+        x_t, b_t, c_t = jnp.split(
+            out, [di, di + s.n_groups * s.d_state], axis=-1)
+        dtp = jax.nn.softplus(dt_t.astype(jnp.float32) + p["dt_bias"])
+        xh = x_t.reshape(bsz, nh, s.head_dim).astype(jnp.float32)
+        rep = nh // s.n_groups
+        bm = jnp.repeat(b_t.reshape(bsz, s.n_groups, s.d_state), rep, axis=1)
+        cm = jnp.repeat(c_t.reshape(bsz, s.n_groups, s.d_state), rep, axis=1)
+        da = jnp.exp(dtp * a)
+        ssm_new = ssm_st * da[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", bm, dtp, xh)
+        y_t = jnp.einsum("bhn,bhnp->bhp", cm, ssm_new) \
+            + xh * p["D"][:, None]
+        okc = ok[:, None, None]
+        conv_st = jnp.where(okc, padded[:, -(kconv - 1):]
+                            if kconv > 1 else conv_st, conv_st)
+        ssm_st = jnp.where(ok[:, None, None, None], ssm_new, ssm_st)
+        return (conv_st, ssm_st), y_t.reshape(bsz, di)
+
+    # f32 SSM carry, matching the one-token path (which accumulates the
+    # recurrence in f32 and hands the f32 state back to the arena).
+    (conv_f, ssm_f), ys = jax.lax.scan(
+        step, (cache["conv"].astype(xbc_seq.dtype),
+               cache["ssm"].astype(jnp.float32)),
+        (jnp.moveaxis(xbc_seq, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(valid, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(u.dtype)            # (B, C, di)
+    y = layers.rmsnorm_apply(p["norm"], y * jax.nn.silu(
+        z.astype(jnp.float32)).astype(u.dtype), cfg.norm_eps)
+    out = layers.linear_apply(p["out_proj"], y, fmt, impl=impl,
+                              interpret=interpret)
+    return out, {"conv": conv_f, "ssm": ssm_f}
 
 
 def ssm_cache_shape(cfg: ModelConfig, batch: int):

@@ -4,31 +4,43 @@ Layered runtime (paper §III.A transplanted to TPU/JAX, grown into a
 scheduler/executor/cache-manager stack):
 
   * `runtime/request.py`   — request/sequence state machine
-  * `runtime/scheduler.py` — FCFS admission into free arena capacity
+  * `runtime/scheduler.py` — FCFS admission + token-budget chunk planning
   * `runtime/kvcache.py`   — cache manager: contiguous slot arena, or the
                              paged block-table arena (``block_size`` set)
   * `runtime/transfers.py` — host<->device byte ledger (paper §V.A: data
                              transfer, not kernels, is the bottleneck)
-  * this file              — the step executor: ONE jitted decode step
-                             over (params, token-batch, positions,
-                             active-mask, arena[, block-tables]) with
-                             fused masked sampling
+  * this file              — the step executor: ONE jitted step over
+                             (params, (slots, chunk) token batch, base
+                             positions, valid lengths, active-mask,
+                             arena[, block-tables]) with fused masked
+                             per-slot sampling
 
-Paged mode: admission needs a free slot AND ``ceil(prompt/block_size)``
-free blocks; decode reserves one block each time a sequence crosses a
-block boundary; on allocator exhaustion the youngest sequence is
-preempted back to the queue (recompute). The block tables ride into the
-jitted step as a (num_slots, max_blocks) int32 argument, so mid-decode
-allocation never changes a traced shape.
+Unified chunked prefill (default, ``prefill_mode="chunked"``): there is
+NO separate prefill phase. Prompt tokens stream through the *same* jitted
+step as decode, up to ``chunk_size`` tokens per slot per iteration, so a
+single traced shape (slots, chunk) covers admission, prompt ingestion and
+generation — zero re-jits and zero pow2 padding. A slot ingesting its
+prompt feeds `min(remaining, chunk)` tokens with sampling masked off; the
+step that consumes the final prompt token samples the first generated
+token from that token's logits (index ``lengths-1``), and the slot then
+feeds one sampled token per step (``lengths == 1``). The transfer ledger
+charges prompt bytes per chunk actually transferred — no pow2 bucket
+waste — and the quantized linear weights stream once per *step* (all
+slots share the pass), not once per slot.
 
-Execution model per sequence: prefill runs the prompt's first L-1 tokens
-(bucketed to a power-of-two length so a handful of compilations cover every
-prompt), the last prompt token is held back and consumed by the decode
-step — so every sampled token, including the first, flows through the same
-jitted masked step, and admissions/completions never change a traced shape
-(no re-jit mid-flight). Pad-bucket cache garbage beyond L-1 is harmless:
-each arena position is rewritten by the decode step before its first use
-and masked until then.
+Legacy bucketed prefill (``prefill_mode="bucketed"``, kept one release
+for the chunked≡bucketed differential tests): prefill runs the prompt's
+first L-1 tokens padded to a power-of-two bucket, the last prompt token
+is held back and consumed by the decode step.
+
+Paged mode: admission needs a free slot AND the initial block reservation
+— the whole prompt's ``ceil(prompt/block_size)`` blocks in bucketed mode,
+only the first *chunk's* blocks in chunked mode (reservation then follows
+chunk progress); each step reserves blocks covering every active slot's
+next feed; on allocator exhaustion the youngest sequence is preempted
+back to the queue (recompute). The block tables ride into the jitted step
+as a (num_slots, max_blocks) int32 argument, so mid-flight allocation
+never changes a traced shape.
 """
 from __future__ import annotations
 
@@ -44,7 +56,7 @@ from repro.core import convert
 from repro.models.api import ModelAPI
 from repro.runtime import sampling
 from repro.runtime.kvcache import KVArena, PagedKVArena
-from repro.runtime.request import Request, SamplingParams, Sequence
+from repro.runtime.request import Request, SamplingParams, SeqState, Sequence
 from repro.runtime.scheduler import Scheduler, SchedulerStats
 from repro.runtime.transfers import TransferLedger, TransferReport
 
@@ -55,7 +67,8 @@ class GenStats:
     decode_s: float = 0.0
     tokens_in: int = 0              # prompt tokens per sequence
     tokens_out: int = 0             # generated tokens per sequence
-    prefill_tokens: int = 0         # prompt tokens processed in prefill phase
+    prefill_tokens: int = 0         # prompt tokens processed (chunked: all L;
+                                    # bucketed: the L-1 prefilled tokens)
     decode_tokens: int = 0          # tokens emitted by decode steps
     cache_bytes: int = 0
     peak_resident_bytes: float = 0.0    # max arena bytes pinned by live seqs
@@ -113,7 +126,7 @@ class ServeReport:
 
 
 def _bucket(n: int) -> int:
-    """Next power of two >= n (prefill length buckets: a handful of
+    """Next power of two >= n (legacy prefill length buckets: a handful of
     compilations cover every prompt length)."""
     b = 1
     while b < n:
@@ -126,71 +139,161 @@ class ServingEngine:
 
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  num_slots: int = 4, max_seq: int = 2048, impl: str = "ref",
+                 prefill_mode: str = "chunked", chunk_size: int = 8,
+                 step_token_budget: Optional[int] = None,
                  top_k: int = 0, top_p: float = 1.0,
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  offload_decisions: Optional[Dict[str, bool]] = None,
-                 host_sampling: bool = False, donate_cache: bool = True):
+                 host_sampling: bool = False, donate_cache: bool = True,
+                 cache_dtype=jnp.bfloat16):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if prefill_mode not in ("chunked", "bucketed"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.model = model
         self.params = params
         self.quant = quant
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.impl = impl
+        self.prefill_mode = prefill_mode
+        self.chunked = prefill_mode == "chunked"
+        self.chunk_size = max(1, min(chunk_size, max_seq))
+        self.step_token_budget = step_token_budget
+        # Engine-level defaults, used when a request leaves them unset
+        # (sampling configs are per-slot *data* in the jitted step, so
+        # mixed streams share one compilation).
         self.top_k, self.top_p = top_k, top_p
         self.paged = block_size is not None
+        self.cache_dtype = cache_dtype
+        self._block_size, self._num_blocks = block_size, num_blocks
+        self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
                                host_sampling=host_sampling)
-        if self.paged:
-            self.arena = PagedKVArena(model, num_slots, max_seq,
-                                      block_size=block_size,
-                                      num_blocks=num_blocks)
-        else:
-            self.arena = KVArena(model, num_slots, max_seq)
-        self.sched = Scheduler(num_slots, max_seq)
+        self._vlm = model.cfg.family == "vlm" and self.chunked
+        self._fresh_arena_sched()
         self._step_compiles = 0
 
         kw = dict(quant=quant, impl=impl)
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, **kw))
+        self._encode_cross = jax.jit(
+            lambda p, f: model.encode_cross(p, f, **kw)) \
+            if model.encode_cross is not None else None
 
-        if self.paged:
-            def step(p, token, positions, active, arena, key, temps,
-                     tables):
-                logits, arena = model.decode_step(p, token, positions,
-                                                  arena,
+        if self.chunked:
+            def step(p, tokens, pos0, lengths, active, arena, key, temps,
+                     top_ks, top_ps, *rest):
+                kw2 = dict(kw)
+                rest = list(rest)
+                if self.paged:
+                    kw2["block_tables"] = rest.pop(0)
+                if self._vlm:
+                    kw2["embeds"] = rest.pop(0)
+                    kw2["embeds_mask"] = rest.pop(0)
+                logits, arena = model.decode_step(p, tokens, pos0, arena,
+                                                  lengths=lengths, **kw2)
+                idx = jnp.maximum(lengths - 1, 0)
+                last = jnp.take_along_axis(
+                    logits, idx[:, None, None], axis=1)[:, 0]
+                nxt = sampling.sample_slots(last, key, temps, active,
+                                            top_k=top_ks, top_p=top_ps)
+                return nxt, arena
+        elif self.paged:
+            def step(p, tokens, pos0, lengths, active, arena, key, temps,
+                     top_ks, top_ps, tables):
+                logits, arena = model.decode_step(p, tokens, pos0, arena,
                                                   block_tables=tables, **kw)
                 nxt = sampling.sample_slots(logits[:, -1], key, temps,
-                                            active, top_k=top_k, top_p=top_p)
+                                            active, top_k=top_ks,
+                                            top_p=top_ps)
                 return nxt, arena
         else:
-            def step(p, token, positions, active, arena, key, temps):
-                logits, arena = model.decode_step(p, token, positions,
-                                                  arena, **kw)
+            def step(p, tokens, pos0, lengths, active, arena, key, temps,
+                     top_ks, top_ps):
+                logits, arena = model.decode_step(p, tokens, pos0, arena,
+                                                  **kw)
                 nxt = sampling.sample_slots(logits[:, -1], key, temps,
-                                            active, top_k=top_k, top_p=top_p)
+                                            active, top_k=top_ks,
+                                            top_p=top_ps)
                 return nxt, arena
         self._step = jax.jit(step,
-                             donate_argnums=(4,) if donate_cache else ())
+                             donate_argnums=(5,) if donate_cache else ())
+
+    # ------------------------------------------------------------------
+    def _fresh_arena_sched(self) -> None:
+        if self.paged:
+            self.arena = PagedKVArena(self.model, self.num_slots,
+                                      self.max_seq,
+                                      block_size=self._block_size,
+                                      num_blocks=self._num_blocks,
+                                      dtype=self.cache_dtype)
+        else:
+            self.arena = KVArena(self.model, self.num_slots, self.max_seq,
+                                 dtype=self.cache_dtype)
+        self.sched = Scheduler(self.num_slots, self.max_seq,
+                               chunked=self.chunked)
+
+    def reset(self) -> None:
+        """Fresh arena + scheduler, warm jit caches — serve() runs are
+        independent, compilations are not repaid."""
+        self._fresh_arena_sched()
 
     # ------------------------------------------------------------------
     def _try_admit(self, seq: Sequence) -> Optional[int]:
         """Arena-side admission gate. Contiguous arena: any free slot.
-        Paged arena: a free slot AND the prompt's whole block reservation
-        (``ceil(prompt/block_size)`` blocks), all-or-nothing."""
+        Paged arena: a free slot AND the initial reservation, all-or-
+        nothing — the whole prompt's blocks in bucketed mode (the padded
+        prefill writes them all at once), only the first chunk's blocks in
+        chunked mode (reservation then follows chunk progress)."""
         if not self.paged:
             return self.arena.alloc()
-        nb = self.arena.blocks_needed(seq.req.prompt_len)
-        return self.arena.alloc_slot(nb)
+        first = seq.req.prompt_len if not self.chunked \
+            else min(seq.req.prompt_len, self.chunk_size)
+        return self.arena.alloc_slot(self.arena.blocks_needed(first))
+
+    def _admit_chunked(self, seq: Sequence, stats: GenStats,
+                       ledger: TransferLedger) -> None:
+        """Chunked admission: no prefill pass. Reset the slot's constant
+        state leaves (the bucketed path overwrote them via write_prefill);
+        enc-dec models additionally run the one-time encoder pass and
+        scatter the cross KV into the slot."""
+        self.arena.reset_slot(seq.slot)
+        if self.paged:
+            ledger.charge_cache_growth(
+                "prefill", len(self.arena.slot_blocks(seq.slot))
+                * self.arena.block_bytes())
+        if self._encode_cross is not None and seq.req.extras \
+                and "frames" in seq.req.extras:
+            t0 = time.perf_counter()
+            frames = jnp.asarray(seq.req.extras["frames"])
+            cache = self._encode_cross(self.params, frames)
+            self.arena.write_prefill(cache, seq.slot)
+            jax.block_until_ready(jax.tree.leaves(self.arena.buffers)[0])
+            stats.prefill_s += time.perf_counter() - t0
+            ledger.charge("prefill", "acts", "h2d", frames.nbytes)
+            cross_bytes = sum(
+                x.size * x.dtype.itemsize
+                for x in jax.tree.leaves(cache["dec_layers"]["cross"]))
+            ledger.charge_cache_growth("prefill", cross_bytes)
 
     def _admit_prefill(self, seq: Sequence, stats: GenStats,
                        ledger: TransferLedger) -> None:
-        """Run the bucketed prefill for one admitted sequence and write its
-        cache into the arena slot."""
+        """Legacy bucketed prefill for one admitted sequence: run the
+        prompt's first L-1 tokens padded to a pow2 bucket and write the
+        cache into the arena slot.
+
+        Recurrent families (ssm/hybrid) prefill at the *exact* prompt
+        length: pad tokens advance the SSM state (there is no kv_len mask
+        for a recurrence), so bucket padding silently corrupts it — a
+        latent bug of the padded-prefill design that the unified chunked
+        step does not have (its invalid tail never touches state). The
+        price is one prefill compilation per distinct prompt length,
+        which is why this path is legacy."""
         L = seq.req.prompt_len
         pre_len = L - 1                       # last prompt token held back
-        P = min(_bucket(pre_len), self.max_seq)
+        bucketable = self.model.cfg.family not in ("ssm", "hybrid")
+        P = min(_bucket(pre_len), self.max_seq) if bucketable else pre_len
         toks = np.zeros((1, P), np.int32)
         toks[0, :pre_len] = seq.req.tokens[:pre_len]
         batch = {"tokens": jnp.asarray(toks)}
@@ -219,54 +322,183 @@ class ServingEngine:
         slot = self.sched.preempt(seq)
         self.arena.free_slot(slot)
 
-    def _reserve_decode(self, ledger: TransferLedger) -> None:
-        """Grow each active sequence's block table to cover its next cache
-        write (position ``seq.position`` needs ``position + 1`` covered
-        tokens). Oldest-first, so under scarcity the last free block goes
-        to the sequence preemption would keep (granting it youngest-first
-        would hand a block to the imminent victim and waste it). On
-        allocator exhaustion, preempt the youngest active sequence and
-        retry; age order guarantees the oldest sequence can always run
-        alone, so the stream never deadlocks."""
+    def _reserve_blocks(self, ledger: TransferLedger) -> None:
+        """Grow each active sequence's block table to cover its next feed
+        (``seq.position + next_feed`` covered positions — one token for a
+        decoding slot, up to a whole chunk for a prefilling one).
+        Oldest-first, so under scarcity the last free block goes to the
+        sequence preemption would keep (granting it youngest-first would
+        hand a block to the imminent victim and waste it). On allocator
+        exhaustion, preempt the youngest active sequence and retry; age
+        order guarantees the oldest sequence can always run alone, so the
+        stream never deadlocks."""
         by_age = sorted(self.sched.active.values(),
                         key=lambda s: s.admit_seq)
         for seq in by_age:
             slot = seq.slot
             if self.sched.active.get(slot) is not seq:
                 continue                        # preempted by an earlier turn
+            phase = "prefill" if seq.state is SeqState.PREFILL else "decode"
             while True:
-                fresh = self.arena.ensure(slot, seq.position + 1)
+                need = seq.position + seq.next_feed(self.chunk_size)
+                fresh = self.arena.ensure(slot, need)
                 if fresh is not None:
                     if fresh:
                         ledger.charge_cache_growth(
-                            "decode", fresh * self.arena.block_bytes())
+                            phase, fresh * self.arena.block_bytes())
                     break
                 victim = self.sched.preempt_victim()
                 self._preempt(victim)
                 if victim is seq:
                     break                       # evicted ourselves: skip step
 
+    # ------------------------------------------------------------------
+    def _sampling_vectors(self, seqs: Dict[int, Sequence]):
+        """Per-slot temperature/top_k/top_p arrays (engine defaults fill
+        request-level unset values)."""
+        ns = self.num_slots
+        temps = np.zeros((ns,), np.float32)
+        top_ks = np.zeros((ns,), np.int32)
+        top_ps = np.ones((ns,), np.float32)
+        for slot, seq in seqs.items():
+            sp = seq.req.sampling
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k if sp.top_k else self.top_k
+            top_ps[slot] = sp.top_p if sp.top_p < 1.0 else self.top_p
+        return temps, top_ks, top_ps
+
+    def _vision_override(self, feeds: Dict[int, int]):
+        """(embeds, mask, bytes) chunk-slice of each prefilling vlm slot's
+        stub patch embeddings: positions [fed, fed+n) below vision_tokens
+        take the provided embedding instead of the token embedding."""
+        ns, C = self.num_slots, self.chunk_size
+        d = self.model.cfg.d_model
+        embeds = np.zeros((ns, C, d), np.float32)
+        mask = np.zeros((ns, C), bool)
+        nbytes = 0
+        for slot, seq in self.sched.active.items():
+            if seq.state is not SeqState.PREFILL or not seq.req.extras:
+                continue
+            vis = seq.req.extras.get("vision_embeds")
+            if vis is None:
+                continue
+            vis = np.asarray(vis)[0]                      # (V, d)
+            n = feeds.get(slot, 0)
+            lo, hi = seq.fed, min(seq.fed + n, vis.shape[0])
+            if hi > lo:
+                embeds[slot, :hi - lo] = vis[lo:hi]
+                mask[slot, :hi - lo] = True
+                nbytes += (hi - lo) * d * 2               # bf16 upload
+        return embeds, mask, nbytes
+
+    def _step_once(self, key, stats: GenStats, ledger: TransferLedger,
+                   t0: float) -> None:
+        """One unified (slots, chunk) step: prompt chunks and decode
+        feedback tokens ride the same traced shape. Token timestamps are
+        read *after* the step's host sync so TTFT/latency include the step
+        (and any first-step compile) that produced each token."""
+        ns, C = self.num_slots, self.chunk_size
+        feeds = self.sched.plan_feeds(C, self.step_token_budget)
+        tokens = np.zeros((ns, C), np.int32)
+        pos0 = np.zeros((ns,), np.int32)
+        lens = np.zeros((ns,), np.int32)
+        active = np.zeros((ns,), bool)
+        for slot, seq in self.sched.active.items():
+            n = feeds[slot]
+            if seq.state is SeqState.PREFILL:
+                tokens[slot, :n] = seq.req.tokens[seq.fed:seq.fed + n]
+            else:
+                tokens[slot, 0] = seq.next_token
+            pos0[slot] = seq.position
+            lens[slot] = n
+            active[slot] = True
+        temps, top_ks, top_ps = self._sampling_vectors(self.sched.active)
+
+        t_step = time.perf_counter()
+        before = self._jit_cache_size()
+        step_args = [self.params, jnp.asarray(tokens), jnp.asarray(pos0),
+                     jnp.asarray(lens), jnp.asarray(active),
+                     self.arena.buffers, key, jnp.asarray(temps),
+                     jnp.asarray(top_ks), jnp.asarray(top_ps)]
+        if self.paged:
+            dev_tables, uploaded = self.arena.device_tables()
+            step_args.append(dev_tables)
+            if uploaded:        # dirty tables only: admission/growth/preempt
+                ledger.charge("decode", "tables", "h2d", uploaded)
+        if self._vlm:
+            embeds, emask, vis_bytes = self._vision_override(feeds)
+            step_args += [jnp.asarray(embeds, jnp.bfloat16),
+                          jnp.asarray(emask)]
+            if vis_bytes:
+                ledger.charge("prefill", "acts", "h2d", vis_bytes)
+        nxt, self.arena.buffers = self._step(*step_args)
+        nxt_host = np.asarray(nxt)            # blocks until step completes
+        t_end = time.perf_counter()
+        now = t_end - t0
+        self._step_compiles += self._jit_cache_size() - before
+
+        pre_toks = sum(n for s, n in feeds.items()
+                       if self.sched.active[s].state is SeqState.PREFILL)
+        dec_toks = sum(n for s, n in feeds.items()
+                       if self.sched.active[s].state is SeqState.DECODE)
+        frac = pre_toks / max(pre_toks + dec_toks, 1)
+        dt = t_end - t_step
+        stats.prefill_s += dt * frac
+        stats.decode_s += dt * (1.0 - frac)
+        ledger.charge_step_weights(prefill_frac=frac)
+
+        resident = self.arena.resident_bytes()
+        stats.peak_resident_bytes = max(stats.peak_resident_bytes, resident)
+        stats.resident_bytes_sum += resident
+        stats.live_tokens_sum += int(sum(
+            s.position + feeds[slot]
+            for slot, s in self.sched.active.items()))
+        tok_bytes = 0.0 if self.paged else self.arena.token_bytes()
+        for slot, seq in list(self.sched.active.items()):
+            n = feeds[slot]
+            if seq.state is SeqState.PREFILL:
+                if n == 0:
+                    continue                  # budget-starved this step
+                stats.prefill_tokens += n
+                ledger.charge_chunk("prefill", n, seq.fed + n)
+                if tok_bytes:
+                    ledger.charge_cache_growth("prefill", n * tok_bytes)
+                if seq.feed_chunk(n):
+                    seq.start_decode()        # this chunk sampled token 0
+                    ledger.charge_sampled()
+                    seq.record_token(int(nxt_host[slot]), now)
+                    stats.decode_tokens += 1
+            else:
+                ledger.charge_chunk("decode", 1, int(pos0[slot]) + 1)
+                if tok_bytes:
+                    ledger.charge_cache_growth("decode", tok_bytes)
+                ledger.charge_sampled()
+                seq.record_token(int(nxt_host[slot]), now)
+                stats.decode_tokens += 1
+        self.sched.record_step()
+        self.sched.retire(self.arena.free)
+
     def _decode_once(self, key, stats: GenStats, ledger: TransferLedger,
                      t0: float) -> None:
-        """One masked decode step over every arena slot. Token timestamps
-        are read *after* the step's host sync so TTFT/latency include the
-        step (and any first-step compile) that produced each token."""
+        """Legacy bucketed mode: one masked single-token decode step over
+        every arena slot."""
         ns = self.num_slots
         tokens = np.zeros((ns, 1), np.int32)
         positions = np.zeros((ns,), np.int32)
+        lens = np.ones((ns,), np.int32)
         active = np.zeros((ns,), bool)
-        temps = np.zeros((ns,), np.float32)
         for slot, seq in self.sched.active.items():
             tokens[slot, 0] = seq.next_token
             positions[slot] = seq.position
             active[slot] = True
-            temps[slot] = seq.req.sampling.temperature
+        temps, top_ks, top_ps = self._sampling_vectors(self.sched.active)
 
         t_step = time.perf_counter()
         before = self._jit_cache_size()
         step_args = [self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                     jnp.asarray(active), self.arena.buffers, key,
-                     jnp.asarray(temps)]
+                     jnp.asarray(lens), jnp.asarray(active),
+                     self.arena.buffers, key, jnp.asarray(temps),
+                     jnp.asarray(top_ks), jnp.asarray(top_ps)]
         if self.paged:
             dev_tables, uploaded = self.arena.device_tables()
             step_args.append(dev_tables)
@@ -327,17 +559,20 @@ class ServingEngine:
         while self.sched.has_work:
             now = time.perf_counter() - t0
             if self.paged:
-                # Incumbents reserve their next-step blocks BEFORE new
+                # Incumbents reserve their next-feed blocks BEFORE new
                 # admissions take them (may preempt-to-queue): admitting
-                # first could burn a full prefill on a sequence that the
+                # first could burn ingestion work on a sequence that the
                 # very next reserve pass would evict. A fresh admission's
-                # first write is covered by its own admission reservation,
+                # first feed is covered by its own admission reservation,
                 # so skipping it here is safe.
-                self._reserve_decode(ledger)
+                self._reserve_blocks(ledger)
             admitted = self.sched.admit(self._try_admit, now)
             for seq in admitted:
-                self._admit_prefill(seq, stats, ledger)
-                seq.start_decode()
+                if self.chunked:
+                    self._admit_chunked(seq, stats, ledger)
+                else:
+                    self._admit_prefill(seq, stats, ledger)
+                    seq.start_decode()
             if not self.sched.active:
                 if self.sched.queue:
                     continue    # preempted/starved: blocks freed, re-admit
@@ -350,7 +585,10 @@ class ServingEngine:
                     self.sched.poll_arrivals(float("inf"))
                 continue
             key, sub = jax.random.split(key)
-            self._decode_once(sub, stats, ledger, t0)
+            if self.chunked:
+                self._step_once(sub, stats, ledger, t0)
+            else:
+                self._decode_once(sub, stats, ledger, t0)
 
         stats.cache_bytes = self.arena.nbytes()
         stats.tokens_in = sum(r.prompt_len for r in requests)
@@ -368,18 +606,24 @@ class Engine:
 
     ``generate(tokens, n)`` submits one request per batch row (identical
     lengths, simultaneous arrival) and reassembles a dense (B, n) output —
-    the legacy lockstep interface, now running on the slot arena."""
+    the legacy lockstep interface, now running on the slot arena. Since
+    top_k/top_p became per-slot *data* in the jitted step, the engine
+    cache is keyed by batch size alone — mixed sampling configs no longer
+    fragment it."""
 
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  max_seq: int = 2048, impl: str = "ref",
+                 prefill_mode: str = "chunked", chunk_size: int = 8,
                  donate_cache: bool = True):
         self.model = model
         self.params = params
         self.quant = quant
         self.max_seq = max_seq
         self.impl = impl
+        self.prefill_mode = prefill_mode
+        self.chunk_size = chunk_size
         self.donate_cache = donate_cache
-        self._engines: Dict = {}    # (batch, top_k, top_p) -> ServingEngine
+        self._engines: Dict[int, ServingEngine] = {}    # batch -> engine
 
     @classmethod
     def from_dense(cls, model: ModelAPI, dense_params, quant: str,
@@ -389,20 +633,17 @@ class Engine:
             if quant != "none" else dense_params
         return cls(model, qparams, quant=quant, **kw)
 
-    def _engine_for(self, batch: int, top_k: int,
-                    top_p: float) -> ServingEngine:
-        key = (batch, top_k, top_p)
-        if key not in self._engines:
-            self._engines[key] = ServingEngine(
+    def _engine_for(self, batch: int) -> ServingEngine:
+        if batch not in self._engines:
+            self._engines[batch] = ServingEngine(
                 self.model, self.params, quant=self.quant,
                 num_slots=batch, max_seq=self.max_seq, impl=self.impl,
-                top_k=top_k, top_p=top_p, donate_cache=self.donate_cache)
+                prefill_mode=self.prefill_mode, chunk_size=self.chunk_size,
+                donate_cache=self.donate_cache)
         else:
             # fresh arena/scheduler, warm jit caches
-            eng = self._engines[key]
-            eng.arena = KVArena(self.model, batch, self.max_seq)
-            eng.sched = Scheduler(batch, self.max_seq)
-        return self._engines[key]
+            self._engines[batch].reset()
+        return self._engines[batch]
 
     @staticmethod
     def _release(eng: ServingEngine) -> None:
@@ -419,7 +660,7 @@ class Engine:
         """tokens: (B, S_prompt) int32. Returns (out_tokens (B, T), stats)."""
         b, s_prompt = tokens.shape
         assert s_prompt + max_new_tokens <= self.max_seq, "KV arena too small"
-        eng = self._engine_for(b, top_k, top_p)
+        eng = self._engine_for(b)
         samp = SamplingParams(temperature=temperature, top_k=top_k,
                               top_p=top_p, seed=seed)
         toks_np = np.asarray(tokens)

@@ -139,6 +139,18 @@ class KVArena:
         self.dtype = dtype
         self.buffers = allocate(model, num_slots, max_seq, dtype)
         self._free = _FreeHeap(num_slots)
+        # Leaves whose extent does NOT follow the sequence length (SSM
+        # recurrent/conv state, enc-dec cross KV) carry *state*, not
+        # masked history — chunked admission must zero them (the bucketed
+        # path overwrote them via write_prefill). Probe two seq lengths
+        # and flag the leaves that did not move.
+        is_shape = lambda x: isinstance(x, tuple)
+        ta = jax.tree.leaves(model.cache_shapes(num_slots, 160),
+                             is_leaf=is_shape)
+        tb = jax.tree.leaves(model.cache_shapes(num_slots, 224),
+                             is_leaf=is_shape)
+        self._const_flags: Tuple[bool, ...] = tuple(
+            a == b for a, b in zip(ta, tb))
 
     # -- slot lifecycle -------------------------------------------------
     @property
@@ -161,6 +173,18 @@ class KVArena:
         """Insert a B=1 prefill cache (seq <= max_seq) into ``slot``."""
         self.buffers = _arena_insert(self.buffers, prefill_cache,
                                      jnp.int32(slot))
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero ``slot``'s constant-size state leaves for a fresh chunked
+        admission (no prefill write happens in chunked mode). Seq-indexed
+        KV leaves are left alone — stale history is masked by kv_len and
+        rewritten before use. No-op (zero device work) for pure-attention
+        models."""
+        if not any(self._const_flags):
+            return
+        leaves, treedef = jax.tree.flatten(self.buffers)
+        new = _zero_const_leaves(leaves, jnp.int32(slot), self._const_flags)
+        self.buffers = jax.tree.unflatten(treedef, new)
 
     def nbytes(self) -> int:
         return cache_nbytes(self.buffers)
@@ -190,6 +214,22 @@ def _arena_insert(arena, prefill_cache, slot):
         start = (0, slot) + (0,) * (a.ndim - 2)
         return jax.lax.dynamic_update_slice(a, c.astype(a.dtype), start)
     return jax.tree.map(w, arena, prefill_cache)
+
+
+@functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def _zero_const_leaves(leaves, slot, const_flags):
+    """Zero the constant-size (non-seq-indexed) leaves of one arena slot
+    — chunked admission's stand-in for the bucketed prefill overwrite.
+    ``slot`` is traced, so every slot shares one compilation."""
+    out = []
+    for a, is_const in zip(leaves, const_flags):
+        if not is_const:
+            out.append(a)
+            continue
+        zero = jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)
+        start = (0, slot) + (0,) * (a.ndim - 2)
+        out.append(jax.lax.dynamic_update_slice(a, zero, start))
+    return out
 
 
 @functools.partial(jax.jit, static_argnums=(4,), donate_argnums=(0,))
@@ -357,6 +397,18 @@ class PagedKVArena:
     # arena-agnostic.
     def free(self, slot: int) -> None:
         self.free_slot(slot)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero ``slot``'s constant-size (non-paged) state leaves for a
+        fresh chunked admission — SSM recurrent state and enc-dec cross KV
+        carry state, not masked history. Paged leaves are left alone
+        (stale pages are masked by kv_len and rewritten before use)."""
+        if all(self._paged_flags):
+            return
+        leaves, treedef = jax.tree.flatten(self.buffers)
+        const = tuple(not f for f in self._paged_flags)
+        new = _zero_const_leaves(leaves, jnp.int32(slot), const)
+        self.buffers = jax.tree.unflatten(treedef, new)
 
     # -- storage ---------------------------------------------------------
     def write_prefill(self, prefill_cache, slot: int) -> None:

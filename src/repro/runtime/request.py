@@ -5,13 +5,22 @@ generation budget, and an arrival time (for request-stream replay). The
 scheduler wraps it in a ``Sequence`` — the engine-side state machine
 
     QUEUED -> PREFILL -> DECODE -> DONE
-               ^           |
-               +- preempt -+   (paged arena exhausted: back to QUEUED)
+               ^  |        |
+               +--+--------+ preempt  (paged arena exhausted: back to QUEUED)
 
-where PREFILL covers the prompt's first L-1 tokens (batched, padded to a
-bucket) and DECODE consumes one token per engine step starting with the
-held-back last prompt token, so *every* sampled token flows through the
-jitted masked decode step (no host-side prefill sampling special case).
+PREFILL has two executions sharing one state machine:
+
+* chunked (default engine mode): the prompt streams through the *same*
+  jitted step as decode, up to ``chunk`` tokens per engine iteration
+  (``fed`` tracks progress); the step that consumes the final prompt
+  token also samples the first generated token, then the sequence flips
+  to DECODE and feeds one sampled token per step.
+* bucketed (legacy ``--prefill-mode bucketed``): the prompt's first L-1
+  tokens run through a separate padded prefill pass and DECODE starts
+  from the held-back last prompt token.
+
+Either way *every* sampled token flows through the jitted masked decode
+step (no host-side prefill sampling special case).
 
 Preemption is recompute-style: the victim's KV blocks are reclaimed and
 the sequence restarts from its prompt on re-admission (greedy decodes
@@ -69,6 +78,7 @@ class Sequence:
     slot: Optional[int] = None
     position: int = 0               # next cache index the decode step writes
     next_token: int = 0             # input token for the next decode step
+    fed: int = 0                    # prompt tokens already streamed (chunked)
     generated: List[int] = dataclasses.field(default_factory=list)
     admit_seq: int = -1             # admission order (preemption priority)
     preemptions: int = 0
@@ -89,14 +99,45 @@ class Sequence:
     def tokens_out(self) -> int:
         return len(self.generated)
 
-    def admit(self, slot: int, now: float) -> None:
+    def admit(self, slot: int, now: float, chunked: bool = False) -> None:
         assert self.state is SeqState.QUEUED
         self.state = SeqState.PREFILL
         self.slot = slot
         self.t_admitted = now
-        # Prefill covers tokens [0, L-1); the decode loop consumes token L-1.
-        self.position = self.req.prompt_len - 1
-        self.next_token = int(self.req.tokens[-1])
+        self.fed = 0
+        if chunked:
+            # The prompt streams through the unified step from position 0.
+            self.position = 0
+            self.next_token = int(self.req.tokens[0])
+        else:
+            # Bucketed prefill covers tokens [0, L-1); the decode loop
+            # consumes the held-back token L-1.
+            self.position = self.req.prompt_len - 1
+            self.next_token = int(self.req.tokens[-1])
+
+    # -- chunked prompt streaming ----------------------------------------
+    @property
+    def prompt_remaining(self) -> int:
+        return self.req.prompt_len - self.fed
+
+    def next_feed(self, chunk: int) -> int:
+        """Tokens this sequence wants from the next unified step: up to
+        ``chunk`` prompt tokens while ingesting, exactly 1 while
+        decoding."""
+        if self.state is SeqState.PREFILL:
+            return min(self.prompt_remaining, chunk)
+        return 1
+
+    def feed_chunk(self, n: int) -> bool:
+        """Account ``n`` prompt tokens streamed through the unified step.
+        Returns True when this chunk consumed the prompt — the caller then
+        flips to DECODE and records the first sampled token (record_token
+        supplies the final position bump, hence the n-1)."""
+        assert self.state is SeqState.PREFILL and n <= self.prompt_remaining
+        self.fed += n
+        done = self.fed == self.req.prompt_len
+        self.position += n - 1 if done else n
+        return done
 
     def start_decode(self) -> None:
         assert self.state is SeqState.PREFILL
@@ -111,6 +152,7 @@ class Sequence:
         self.slot = None
         self.position = 0
         self.next_token = 0
+        self.fed = 0
         self.generated = []
         self.t_first_token = None
         self.preemptions += 1

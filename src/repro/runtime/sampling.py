@@ -3,8 +3,12 @@
 
 ``sample``       — single sampling config for a lockstep batch (legacy path).
 ``sample_slots`` — the fused masked sampler the continuous-batching engine
-                   jits into its decode step: per-slot temperature vector +
-                   active mask over the fixed slot axis.
+                   jits into its decode step: per-slot temperature, top_k and
+                   top_p *vectors* + active mask over the fixed slot axis.
+                   Making top_k/top_p traced per-slot data (rather than
+                   trace-time constants) means one compiled step serves a
+                   mixed-request stream — the engine's jit cache no longer
+                   fragments per sampling config.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import jax.numpy as jnp
 
 def _filter_top_k_top_p(lf: jnp.ndarray, top_k: int,
                         top_p: float) -> jnp.ndarray:
+    """Static (trace-time) filters for the legacy lockstep path."""
     if top_k > 0:
         kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < kth, -1e30, lf)
@@ -28,6 +33,31 @@ def _filter_top_k_top_p(lf: jnp.ndarray, top_k: int,
     return lf
 
 
+def _filter_top_k_top_p_slots(lf: jnp.ndarray, top_k: jnp.ndarray,
+                              top_p: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot top-k/top-p filters over (B, V) logits with (B,) traced
+    parameters. top_k == 0 / top_p == 1 disable the filter for that slot.
+
+    Implemented with sorts instead of ``lax.top_k`` so k can be data (k is
+    a *gather index* into the sorted row, not a shape) — the price of one
+    extra V-sort per filter, the win is zero recompiles across mixed
+    sampling configs."""
+    v = lf.shape[-1]
+    # top-k: threshold at the k-th largest value of each row.
+    sorted_k = jnp.sort(lf, axis=-1)[..., ::-1]
+    k_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth = jnp.take_along_axis(sorted_k, k_idx[:, None], axis=-1)
+    lf = jnp.where((top_k > 0)[:, None] & (lf < kth), -1e30, lf)
+    # top-p over the (possibly top-k-filtered) distribution — matches the
+    # sequential semantics of the static path.
+    sorted_p = jnp.sort(lf, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_p, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p[:, None], axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_p, cutoff_idx, axis=-1)
+    return jnp.where((top_p < 1.0)[:, None] & (lf < cutoff), -1e30, lf)
+
+
 def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
            top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
     """logits: (B, V) -> (B,) int32 tokens. temperature=0 -> greedy."""
@@ -39,18 +69,23 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
 
 
 def sample_slots(logits: jnp.ndarray, key, temperature: jnp.ndarray,
-                 active: jnp.ndarray, *, top_k: int = 0,
-                 top_p: float = 1.0) -> jnp.ndarray:
+                 active: jnp.ndarray, *, top_k=0, top_p=1.0) -> jnp.ndarray:
     """Fused per-slot sampling for the serving decode step.
 
     logits: (B, V); temperature: (B,) — 0 selects greedy per slot;
-    active: (B,) bool — inactive slots emit token 0. top_k/top_p are
-    trace-time constants (engine-level policy). Fully jittable: both the
-    greedy and stochastic branches are computed and selected per slot.
+    active: (B,) bool — inactive slots emit token 0. top_k/top_p may be
+    scalars or (B,) arrays — either way they are *traced data*, so mixed
+    per-request sampling configs share one compilation. Fully jittable:
+    both the greedy and stochastic branches are computed and selected per
+    slot.
     """
+    b = logits.shape[0]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = jnp.maximum(temperature, 1e-6)[:, None]
-    lf = _filter_top_k_top_p(logits.astype(jnp.float32) / t, top_k, top_p)
+    top_k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    top_p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    lf = _filter_top_k_top_p_slots(logits.astype(jnp.float32) / t,
+                                   top_k, top_p)
     stochastic = jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
     tok = jnp.where(temperature > 0.0, stochastic, greedy)
     return jnp.where(active, tok, 0)

@@ -9,12 +9,23 @@ completions never change a traced shape.
 Admission gates:
   * arrival time — a request joins the queue only once its ``arrival_s``
     has passed (request-stream replay);
-  * capacity — the engine's ``admit_fn(seq)`` returns a slot only when the
-    arena can host the sequence (a free slot for the contiguous arena; a
-    free slot AND ``ceil(prompt/block_size)`` free blocks for the paged
-    arena). FCFS is strict: a refused head-of-queue blocks later arrivals
-    rather than being skipped.
+  * capacity — the engine's ``admit_fn(seq)`` returns a slot only when
+    the arena can host the sequence (a free slot for the contiguous
+    arena; a free slot AND the initial block reservation for the paged
+    arena — the whole prompt's blocks in bucketed mode, only the *first
+    chunk's* blocks in chunked mode, since reservation then follows chunk
+    progress). FCFS is strict: a refused head-of-queue blocks later
+    arrivals rather than being skipped.
   * sequence budget — prompt_len + max_new_tokens must fit max_seq.
+
+Chunked mode (``chunked=True``, the default engine path): admission is a
+*token-budget* decision rather than a whole-prompt-prefill commitment —
+an admitted prompt streams through the unified step at up to ``chunk``
+tokens per iteration, and the per-step token budget (``num_slots x
+chunk``, optionally capped lower by the engine's ``step_token_budget``)
+is divided decode-first, then oldest-prefill-first; a prefilling slot
+that gets no budget this step simply feeds zero tokens (counted in
+``stats.deferred_feeds``) and resumes next step.
 
 Preemption (paged arena only): when decode crosses a block boundary and
 the allocator is exhausted, the engine preempts the *youngest* admitted
@@ -39,6 +50,8 @@ class SchedulerStats:
     occupancy_sum: float = 0.0      # sum over steps of active-slot count
     max_occupancy: int = 0          # peak concurrent sequences
     steps: int = 0
+    prefill_chunks: int = 0         # chunked mode: prompt chunks scheduled
+    deferred_feeds: int = 0         # chunked mode: slots starved by budget
 
     @property
     def mean_occupancy(self) -> float:
@@ -46,9 +59,10 @@ class SchedulerStats:
 
 
 class Scheduler:
-    def __init__(self, num_slots: int, max_seq: int):
+    def __init__(self, num_slots: int, max_seq: int, chunked: bool = False):
         self.num_slots = num_slots
         self.max_seq = max_seq
+        self.chunked = chunked
         self.pending: Deque[Sequence] = deque()     # submitted, not arrived
         self.queue: Deque[Sequence] = deque()       # arrived, waiting on slot
         self.active: Dict[int, Sequence] = {}       # slot -> sequence
@@ -87,7 +101,7 @@ class Scheduler:
             if slot is None:
                 break
             seq = self.queue.popleft()
-            seq.admit(slot, now)
+            seq.admit(slot, now, chunked=self.chunked)
             seq.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.active[slot] = seq
@@ -97,6 +111,39 @@ class Scheduler:
             self.stats.admitted += 1
             admitted.append(seq)
         return admitted
+
+    # -- chunk scheduling (token-budget division, chunked mode) -----------
+    def plan_feeds(self, chunk: int,
+                   budget: Optional[int] = None) -> Dict[int, int]:
+        """{slot: tokens to feed this step}. Decoding slots are funded
+        first (1 token each — stalling an in-flight decode only delays its
+        own completion); the remaining budget goes to prefilling slots
+        oldest-first, up to ``chunk`` tokens each. ``budget`` defaults to
+        ``num_slots * chunk`` (the traced step shape), so the cap only
+        bites when the engine sets a tighter ``step_token_budget``. A
+        starved prefill slot feeds 0 tokens and resumes next step."""
+        if budget is None:
+            budget = self.num_slots * chunk
+        feeds: Dict[int, int] = {}
+        prefilling = []
+        for slot, seq in self.active.items():
+            if seq.state is SeqState.DECODE:
+                feeds[slot] = 1
+                budget -= 1
+            else:
+                prefilling.append(seq)
+        for i, seq in enumerate(sorted(prefilling,
+                                       key=lambda s: s.admit_seq)):
+            n = min(seq.next_feed(chunk), max(budget, 0))
+            if i == 0 and not feeds:
+                n = max(n, 1)   # liveness: the oldest sequence always moves
+            feeds[seq.slot] = n
+            budget -= n
+            if n:
+                self.stats.prefill_chunks += 1
+            else:
+                self.stats.deferred_feeds += 1
+        return feeds
 
     # -- step bookkeeping -------------------------------------------------
     def record_step(self) -> None:

@@ -24,10 +24,24 @@ of a generation to a (phase, category, direction) cell:
                        so bytes-resident tracks actual block occupancy
   direction  h2d | d2h | dev
 
+Two charging schemes share the ledger:
+
+* legacy bucketed (``charge_prefill`` + ``charge_decode_step``): one
+  padded prefill pass per prompt (weights + pow2-padded act bytes) and a
+  full per-slot weight stream every decode step — the paper's
+  single-request llama.cpp execution model.
+* unified chunked step (``charge_step_weights`` + ``charge_chunk`` +
+  ``charge_sampled``): the quantized *linear* weights stream once per
+  step — every slot's chunk shares the pass — while per-slot charges
+  cover exactly the tokens actually fed (token ids, activation staging,
+  output drain, and the slot's own KV stream). No pow2 padding bytes, no
+  N-times-replicated weight stream: this is what makes chunked prefill's
+  bytes/token measurably lower at equal workload in bench_serving.py.
+
 Kernel-byte math comes from `core/offload.py`'s ``KernelCall`` accounting
-(`phase_transfer_bytes`), optionally filtered by an ``OffloadPolicy``
-decision table so host-resident kernels charge nothing — the live analog
-of Table 2's per-format offload ratios.
+(`phase_transfer_bytes` / `model_kernel_calls`), optionally filtered by
+an ``OffloadPolicy`` decision table so host-resident kernels charge
+nothing — the live analog of Table 2's per-format offload ratios.
 """
 from __future__ import annotations
 
@@ -36,8 +50,12 @@ from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.coalesce import TransferModel
-from repro.core.offload import phase_transfer_bytes
+from repro.core.offload import model_kernel_calls, phase_transfer_bytes
 from repro.core.quant.formats import RECIPES
+
+# The fp16 attention calls whose "weights" are the KV-cache stream —
+# per-slot traffic, never shared across a batched step.
+_KV_STREAM_CALLS = ("attn_qk", "attn_pv")
 
 H2D = "h2d"
 D2H = "d2h"
@@ -96,6 +114,64 @@ class TransferLedger:
 
     def charge_cache_growth(self, phase: str, nbytes: float) -> None:
         self.charge(phase, "kv_arena", DEV, nbytes)
+
+    # -- unified-chunked-step charges -------------------------------------
+    def _split_kernel_bytes(self, kv_len: int, new_tokens: int):
+        """(linear_weights, kv_stream, acts, outs) bytes for ``new_tokens``
+        queries against a ``kv_len``-deep KV — one slot's share of a
+        unified step. Linear weights are returned separately because the
+        step streams them once for ALL slots (``charge_step_weights``)."""
+        w_lin = w_kv = a = o = 0.0
+        for c in model_kernel_calls(self.cfg, self.quant, kv_len,
+                                    new_tokens, decode=True):
+            if self.decisions is not None and \
+                    not self.decisions.get(c.name, True):
+                continue
+            if c.name in _KV_STREAM_CALLS:
+                w_kv += c.weight_bytes
+            else:
+                w_lin += c.weight_bytes
+            a += c.act_bytes
+            o += c.out_bytes
+        return w_lin, w_kv, a, o
+
+    def charge_step_weights(self, prefill_frac: float = 0.0) -> None:
+        """One unified step's shared quantized-weight stream (charged once
+        per step, not per slot — the whole (slots, chunk) batch rides one
+        pass through the model). ``prefill_frac``: fraction of the step's
+        valid tokens that were prompt chunks — the stream is attributed
+        pro-rata so phase totals stay meaningful."""
+        w_lin, _, _, _ = self._split_kernel_bytes(1, 1)
+        if prefill_frac > 0.0:
+            self.charge("prefill", "weights", H2D, w_lin * prefill_frac)
+        if prefill_frac < 1.0:
+            self.charge("decode", "weights", H2D,
+                        w_lin * (1.0 - prefill_frac))
+
+    def charge_chunk(self, phase: str, new_tokens: int,
+                     kv_len: int) -> None:
+        """One slot's chunk inside a unified step: exactly ``new_tokens``
+        token ids + activation staging in, output drain out, plus the
+        slot's own KV stream at depth ``kv_len``. Prefill chunks count
+        toward the prefill token tally; decode feedback tokens are counted
+        by ``charge_sampled`` (one per *generated* token), keeping
+        bytes_per_token's denominator comparable with the bucketed path."""
+        self.charge(phase, "tokens", H2D, new_tokens * 4)
+        _, w_kv, a, o = self._split_kernel_bytes(kv_len, new_tokens)
+        self.charge(phase, "weights", H2D, w_kv)
+        self.charge(phase, "acts", H2D, a)
+        self.charge(phase, "outs", D2H, o)
+        if phase == "prefill":
+            self.tokens["prefill"] += new_tokens
+
+    def charge_sampled(self, n: int = 1) -> None:
+        """``n`` sampled tokens leaving the device (or full logit rows
+        under host sampling). Each sampled token is one generated token."""
+        if self.host_sampling:
+            self.charge("decode", "logits", D2H, n * self.cfg.vocab_size * 4)
+        else:
+            self.charge("decode", "sampled", D2H, n * 4)
+        self.tokens["decode"] += n
 
     # -- views -----------------------------------------------------------
     def breakdown(self) -> Dict[str, Dict[str, Dict[str, float]]]:

@@ -144,14 +144,16 @@ def test_engine_generate_stochastic_shapes(served_model):
 def test_ledger_matches_offload_accounting(served_model):
     """Acceptance check: live ledger totals within 5% of core/offload.py's
     KernelCall byte accounting for one [9:4] q8_0 workload (prefill bucket
-    8 == prompt_len-1, so the analytic replay is shape-exact)."""
+    8 == prompt_len-1, so the analytic replay is shape-exact). Pins the
+    *legacy bucketed* charging scheme; the chunked scheme has its own
+    closure test below."""
     cfg, model, params = served_model
     L, GEN = 9, 4
     rng = np.random.RandomState(5)
     req = Request(rid=0, tokens=rng.randint(0, cfg.vocab_size, L),
                   max_new_tokens=GEN)
     engine = ServingEngine(model, params, quant="none", num_slots=1,
-                           max_seq=16)
+                           max_seq=16, prefill_mode="bucketed")
     report = engine.serve([req], seed=0)
 
     pre = phase_transfer_bytes(cfg, "fp16", L - 1, batch=1, decode=False)
@@ -249,12 +251,13 @@ def test_paged_doubles_concurrency_at_equal_arena_bytes(served_model):
         rc.stats.resident_bytes_per_token
 
 
-def test_genstats_phase_token_accounting(served_model):
-    """The decode-timing skew fix: every generated token is a decode-phase
+def test_genstats_phase_token_accounting_bucketed(served_model):
+    """Legacy bucketed accounting: every generated token is a decode-phase
     token (the held-back last prompt token is decoded, not prefilled), and
     prefill counts exactly the L-1 prefilled prompt tokens."""
     cfg, model, params = served_model
-    engine = ServingEngine(model, params, num_slots=1, max_seq=16)
+    engine = ServingEngine(model, params, num_slots=1, max_seq=16,
+                           prefill_mode="bucketed")
     req = Request(rid=0, tokens=np.arange(7) % cfg.vocab_size,
                   max_new_tokens=5)
     report = engine.serve([req], seed=0)
@@ -264,3 +267,24 @@ def test_genstats_phase_token_accounting(served_model):
     assert st.tokens_in == 7
     assert st.decode_s > 0 and st.prefill_s > 0
     assert st.decode_tok_per_s == pytest.approx(5 / st.decode_s)
+
+
+def test_genstats_phase_token_accounting_chunked(served_model):
+    """Chunked accounting: ALL L prompt tokens stream through the unified
+    step as prefill tokens (no held-back token), every generated token is
+    a decode token, and the ledger's prefill token tally matches — no
+    pow2 bucket inflation."""
+    cfg, model, params = served_model
+    engine = ServingEngine(model, params, num_slots=1, max_seq=16,
+                           chunk_size=4)
+    req = Request(rid=0, tokens=np.arange(7) % cfg.vocab_size,
+                  max_new_tokens=5)
+    report = engine.serve([req], seed=0)
+    st = report.stats
+    assert st.prefill_tokens == 7          # all L, exactly (7 = 4 + 3 chunk)
+    assert st.decode_tokens == 5 == st.tokens_out
+    assert st.tokens_in == 7
+    assert st.decode_s > 0 and st.prefill_s > 0
+    assert report.ledger.tokens["prefill"] == 7   # ledger: exact, no pow2
+    assert report.ledger.tokens["decode"] == 5
+    assert report.sched.prefill_chunks == 2       # ceil(7/4)
