@@ -1,0 +1,216 @@
+"""Fused paged-attention decode kernel: block-table-native KV reads.
+
+The serving engine's paged decode path used to gather every slot's
+physical pages into a dense ``(B, max_blocks*block_size, ...)`` logical
+view (``attention.paged_view``) before attending — per-step KV traffic
+scaling with *arena capacity* instead of live tokens, exactly the
+data-movement class the paper's system evaluation names as the LLM
+serving bottleneck. This kernel removes the materialization: the grid
+walks each slot's **block table**, and the K/V ``BlockSpec`` index maps
+resolve ``(slot, kv_block)`` to a physical page id through a
+scalar-prefetched table (the PagedAttention design, on the blocked
+online-softmax skeleton of ``kernels/flash_attention.py``).
+
+Layout contract (see ``PagedKVArena.page_layout``):
+
+  q        (B, C, H, D)        — C >= 1 chunked-decode queries per slot
+  k_pages  (NP, bs, Hkv, D)    — physical pages incl. the trailing null
+  v_pages  (NP, bs, Hkv, Dv)     page; H % Hkv == 0 (GQA groups)
+  tables   (B, MB) int32       — logical block -> physical page; entries
+                                 past a slot's allocation hold the null
+                                 page id (finite garbage, always masked)
+  positions (B,) int32         — base position of each slot's chunk;
+                                 query i sits at base + i and attends
+                                 kv positions <= base + i (causal depth)
+
+MLA runs the same kernel in its absorbed-matmul form: q is the
+rank-projected ``q_eff`` against the compressed ``ckv`` pages (which are
+also V), and the decoupled RoPE side joins the scores through the
+optional ``q2``/``k2_pages`` operands — so the compressed cache is
+attended in place, never expanded *and* never gathered.
+
+Grid: ``(B, Hkv, MB)`` with f32 running max/sum statistics carried in
+VMEM scratch across the kv-block axis. Blocks past a slot's live depth
+(``base + C - 1``) are skipped two ways: the index map clamps to the
+last live block (Pallas elides the re-fetch of an unchanged block — no
+DMA) and ``pl.when`` skips the compute. Per-step KV bytes are therefore
+O(live tokens), not O(arena).
+
+``interpret=True`` runs the same kernel body through the Pallas
+interpreter so CPU CI exercises the exact serving code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import MASK_VALUE
+
+
+def _kernel(tables_ref, pos_ref, len_ref, *refs, sm_scale, block_size,
+            group, has_rope, shared_kv):
+    """One (slot, kv-head, kv-block) step of the online softmax."""
+    if has_rope:
+        q1_ref, q2_ref, k1_ref, k2_ref = refs[:4]
+        rest = refs[4:]
+    else:
+        q1_ref, k1_ref = refs[:2]
+        q2_ref = k2_ref = None
+        rest = refs[2:]
+    # MLA's compressed latents are both K and V: sharing the ref means
+    # one DMA per live block, not two.
+    v_ref = k1_ref if shared_kv else rest[0]
+    o_ref = rest[0 if shared_kv else 1]
+    acc_ref, m_ref, l_ref = refs[-3:]
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+    pos0 = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Last block any of this slot's *valid* queries can see (query i
+    # attends positions <= pos0 + i, and only the first len_ref[b]
+    # queries are real — the tail is garbage-by-contract the engine
+    # never reads). Blocks past it carry no live tokens.
+    last_live = (pos0 + jnp.maximum(len_ref[b], 1) - 1) // block_size
+
+    @pl.when(j <= last_live)
+    def _body():
+        q = q1_ref[0, 0].astype(jnp.float32)              # (CG, D)
+        k = k1_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (CG, bs)
+        if has_rope:                                      # MLA rope scores
+            s = s + jax.lax.dot_general(
+                q2_ref[0, 0].astype(jnp.float32),
+                k2_ref[0, :, 0, :].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        # Row r is query r // group; its causal depth is pos0 + r//group.
+        ki = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qc = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        s = jnp.where(ki <= pos0 + qc, s, MASK_VALUE)
+        m_prev = m_ref[...]                               # (CG, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0, :, 0, :].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _fold_heads(x, b, c, hkv, group):
+    """(B, C, H, D) -> (B, Hkv, C*G, D): row r of a kv-head's query tile
+    is (chunk entry r // G, group member r % G) — head h = hkv*G + g,
+    matching ``decode_attention``'s grouped-query layout."""
+    d = x.shape[-1]
+    x = x.reshape(b, c, hkv, group, d)
+    return jnp.transpose(x, (0, 2, 1, 3, 4)).reshape(b, hkv, c * group, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "out_dtype", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
+                           sm_scale: float, q2=None, k2_pages=None,
+                           lengths=None, out_dtype=None,
+                           interpret: bool = False):
+    """Fused paged decode attention over a chunk of C queries per slot.
+
+    q: (B, C, H, D); k_pages/v_pages: (NP, bs, Hkv, D/Dv) physical pages
+    (NP includes the arena's trailing null page); block_tables: (B, MB)
+    int32; positions: (B,) int32 chunk base positions. ``v_pages=None``
+    shares the K pages as V (MLA's compressed latents are both — one
+    DMA per live block instead of two). Optional q2 (B, C, H, D2) /
+    k2_pages (NP, bs, Hkv, D2) contribute a second score term before
+    the softmax (MLA's decoupled-RoPE side). ``lengths`` (B,) int32:
+    valid queries per row (chunked prefill) — each row's block walk
+    stops at its last *valid* query's causal depth, so a steady-state
+    decode row (lengths == 1) never over-fetches for its garbage tail.
+    Returns (B, C, H, Dv) in ``out_dtype`` (default q.dtype).
+    """
+    b, c, h, d = q.shape
+    num_pages, bs, hkv, _ = k_pages.shape
+    shared_kv = v_pages is None
+    dv = k_pages.shape[-1] if shared_kv else v_pages.shape[-1]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    cg = c * group
+    nkb = block_tables.shape[1]
+    has_rope = q2 is not None
+    positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (b,))
+    if lengths is None:
+        lengths = jnp.full((b,), c, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+    def page_index(bb, hh, jj, tables, pos, lens):
+        # Clamp dead blocks to the last live one: Pallas skips the
+        # re-fetch of an unchanged block index, so trailing table entries
+        # cost no DMA (the compute is skipped by pl.when).
+        last = (pos[bb] + jnp.maximum(lens[bb], 1) - 1) // bs
+        return (tables[bb, jnp.minimum(jj, last)], 0, hh, 0)
+
+    def q_index(bb, hh, jj, tables, pos, lens):
+        return (bb, hh, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, cg, d), q_index)]
+    args = [_fold_heads(q, b, c, hkv, group)]
+    if has_rope:
+        d2 = q2.shape[-1]
+        in_specs.append(pl.BlockSpec((1, 1, cg, d2), q_index))
+        args.append(_fold_heads(q2, b, c, hkv, group))
+    in_specs.append(pl.BlockSpec((1, bs, 1, d), page_index))
+    args.append(k_pages)
+    if has_rope:
+        in_specs.append(pl.BlockSpec((1, bs, 1, k2_pages.shape[-1]),
+                                     page_index))
+        args.append(k2_pages)
+    if not shared_kv:
+        in_specs.append(pl.BlockSpec((1, bs, 1, dv), page_index))
+        args.append(v_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nkb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, cg, dv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((cg, dv), jnp.float32),
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, 1), jnp.float32),
+        ],
+    )
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    out = pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, block_size=bs,
+                          group=group, has_rope=has_rope,
+                          shared_kv=shared_kv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, cg, dv),
+                                       out_dtype or q.dtype),
+        compiler_params=cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), positions, lengths, *args)
+    out = out.reshape(b, hkv, c, group, dv)
+    return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(b, c, h, dv)

@@ -9,19 +9,20 @@ measured live instead of modeled):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --quant q8_0 --requests 8 --slots 4 --arrival poisson --rate 4
 
-Prompts stream through the unified chunked-prefill step by default
+Prompts stream through the unified chunked-prefill step
 (``--chunk-size`` tokens per slot per iteration, one traced shape, no
-pow2 padding); ``--prefill-mode bucketed`` keeps the legacy padded
-prefill pass for one release:
+pow2 padding — the legacy bucketed prefill pass is retired):
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
       --chunk-size 4              # unified step, 4-token prompt chunks
 
 Paged KV arena (block-table allocation: admit on free blocks, grow
-tables with chunk progress, preempt-to-queue on exhaustion):
+tables with chunk progress, preempt-to-queue on exhaustion). Paged K/V
+is attended by the fused block-table Pallas kernel by default;
+``--paged-attn ref`` keeps the dense-gather oracle:
 
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
-      --slots 8 --block-size 8 --num-blocks 16
+      --slots 8 --block-size 8 --num-blocks 16 --paged-attn fused
 
 Batch mode (legacy lockstep interface, kept for the paper's fixed [in:out]
 workload grid):
@@ -103,9 +104,10 @@ def run_stream(cfg, model, params, args) -> None:
     engine = ServingEngine(
         model, params, quant=args.quant, num_slots=args.slots,
         max_seq=max_seq, offload_decisions=decisions,
-        prefill_mode=args.prefill_mode, chunk_size=args.chunk_size,
+        chunk_size=args.chunk_size,
         block_size=args.block_size or None, num_blocks=args.num_blocks
-        or None, host_sampling=args.host_sampling)
+        or None, paged_attn=args.paged_attn,
+        host_sampling=args.host_sampling)
 
     report = engine.serve(reqs, seed=args.seed)
     st = report.stats
@@ -113,21 +115,19 @@ def run_stream(cfg, model, params, args) -> None:
     arena_desc = f"slots={args.slots}"
     if engine.paged:
         arena_desc += (f" paged[{engine.arena.num_blocks}x"
-                       f"{engine.arena.block_size}]")
-    mode_desc = f"chunked[{engine.chunk_size}]" if engine.chunked \
-        else "bucketed"
+                       f"{engine.arena.block_size} "
+                       f"attn={engine.paged_attn}]")
     print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
-          f"({args.arrival}) {arena_desc} prefill={mode_desc} "
-          f"gen={args.gen}")
+          f"({args.arrival}) {arena_desc} "
+          f"prefill=chunked[{engine.chunk_size}] gen={args.gen}")
     print(f"  completed {report.sched.completed}/{args.requests} | "
           f"slot reuses {report.sched.slot_reuses} | "
           f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} "
           f"(max {report.sched.max_occupancy}) | "
           f"step compiles {report.step_compiles}")
-    if engine.chunked:
-        print(f"  chunk scheduling: {report.sched.prefill_chunks} prompt "
-              f"chunks | {report.sched.deferred_feeds} budget-deferred "
-              f"feeds | {st.prefill_tokens} prompt tokens streamed")
+    print(f"  chunk scheduling: {report.sched.prefill_chunks} prompt "
+          f"chunks | {report.sched.deferred_feeds} budget-deferred "
+          f"feeds | {st.prefill_tokens} prompt tokens streamed")
     if engine.paged:
         print(f"  paged arena: block reissues "
               f"{engine.arena.allocator.reissues} | preemptions "
@@ -178,11 +178,6 @@ def main() -> None:
     ap.add_argument("--quant", default="none",
                     choices=["none", "fp16", "q8_0", "q3_k_s", "q6_k"])
     ap.add_argument("--mode", default="stream", choices=["stream", "batch"])
-    ap.add_argument("--prefill-mode", default="chunked",
-                    choices=["chunked", "bucketed"],
-                    help="chunked (default): prompts stream through the "
-                         "unified decode step; bucketed: legacy pow2-"
-                         "padded prefill pass (one release of support)")
     ap.add_argument("--chunk-size", type=int, default=8,
                     help="chunked prefill: prompt tokens per slot per "
                          "unified step (the step's traced width)")
@@ -200,6 +195,12 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged arena physical blocks "
                          "(0 = slots * ceil(max_seq/block_size))")
+    ap.add_argument("--paged-attn", default="fused",
+                    choices=["fused", "ref"],
+                    help="paged decode attention: fused block-table "
+                         "Pallas kernel (default, O(live-token) KV "
+                         "traffic) or the dense-gather oracle "
+                         "(O(arena) traffic, differential reference)")
     ap.add_argument("--arrival", default="poisson",
                     choices=["poisson", "back2back"])
     ap.add_argument("--rate", type=float, default=8.0,

@@ -24,7 +24,10 @@ class ModelAPI:
     init: Callable                    # (key, quant) -> params
     loss: Callable                    # (params, batch, **opts) -> scalar
     forward: Callable                 # (params, batch, **opts) -> (logits, aux)
-    prefill: Callable                 # (params, batch, **opts) -> (logits, cache)
+    prefill: Callable                 # (params, batch, **opts) -> (logits,
+                                      # cache) — lockstep/eval entry only;
+                                      # the serving runtime never calls it
+                                      # (prompts stream through decode_step)
     decode_step: Callable             # (params, token, position, cache, **o)
     cache_shapes: Callable            # (batch, seq) -> shape pytree
     # encdec only: admission-time encoder pass for chunked prefill —
@@ -105,9 +108,14 @@ class ModelAPI:
                            num_blocks: Optional[int] = None) -> Dict:
         """Entry ShapeDtypeStructs for the *unified* chunked-prefill step:
         ONE traced shape (num_slots, chunk) covers prompt ingestion AND
-        generation — per-slot base positions + valid-entry counts replace
-        the separate bucketed prefill entry point. Paged mode adds the
-        block tables; vlm adds the stub patch-embedding override."""
+        generation — per-slot base positions + valid-entry counts (the
+        retired bucketed prefill had its own entry point; ``prefill``
+        now serves only lockstep/eval callers). Paged mode adds the
+        block tables the decode step's ``paged_impl`` (fused kernel or
+        gather oracle) reads K/V through; vlm adds the stub
+        patch-embedding override. State leaves may be stored in a
+        different dtype than requested (see kvcache.step_leaf_dtypes);
+        these specs describe the uniform-dtype request."""
         i32 = jnp.int32
         specs = {
             "tokens": jax.ShapeDtypeStruct((num_slots, chunk), i32),

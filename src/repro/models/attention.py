@@ -21,10 +21,17 @@ KV caches:
 Paged decode (``block_tables`` passed): cache leaves are physical pages —
 GQA {"k": (NB, bs, Hkv, D), ...}, MLA {"ckv": (NB, bs, rank), ...} — and
 ``block_tables`` (B, max_blocks) int32 maps each slot's logical blocks to
-pages. The new token is scattered to its page and attention reads K/V
-through a per-slot table gather; the gather *is* the KV read decode
-attention performs anyway, so paging costs no extra cache traffic while
-block allocation stays a host-side table edit (no traced-shape change).
+pages. The new token is scattered to its page, then attention reads K/V
+through the table one of two ways (``paged_impl``):
+
+* ``"fused"`` (default): the Pallas blocked online-softmax kernel in
+  ``kernels/paged_attention.py`` resolves (slot, kv_block) -> page via
+  scalar-prefetched tables and attends the pages *in place* — per-step
+  KV traffic is O(live tokens).
+* ``"ref"``: the original jnp gather (``paged_view``) materializes each
+  slot's dense (B, max_blocks*block_size, ...) logical view every step —
+  O(arena) traffic, kept as the fallback and the differential oracle the
+  fused kernel is tested against.
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import paged_decode_attention
 from repro.models import flags, layers
 from repro.models.layers import Params
 
@@ -329,7 +337,8 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                position, cache: Dict, *, fmt: str = "none",
                impl: str = "ref", interpret: bool = True,
                mrope_positions=None, cross: bool = False,
-               block_tables=None, lengths=None):
+               block_tables=None, lengths=None,
+               paged_impl: str = "fused"):
     """Decode step over a chunk of C tokens. x: (B, C, d); ``position``:
     scalar int32 or (B,) base position (chunk entry i sits at base + i);
     cache {"k","v"}: (B, S, Hkv, D) pre-allocated — or physical pages
@@ -339,6 +348,10 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     ``lengths``: (B,) valid entries per row (chunked prefill: a slot may
     fill only part of the chunk) — writes past a row's length are dropped
     and its tail outputs are garbage the engine never reads.
+
+    ``paged_impl``: "fused" attends the physical pages in place through
+    the block-table-native Pallas kernel (no per-step gather); "ref"
+    keeps the ``paged_view`` dense-gather oracle.
 
     ``cross``: whisper cross-attention — attend to a static encoder cache
     without inserting (cross caches stay per-slot, never paged)."""
@@ -356,6 +369,16 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
         vp = paged_insert_token(cache["v"], v, position, block_tables,
                                 lengths)
         cache = {"k": kp, "v": vp}
+        if paged_impl == "fused":
+            base = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+            o = paged_decode_attention(q, kp, vp, block_tables, base,
+                                       sm_scale=hd ** -0.5,
+                                       lengths=lengths,
+                                       interpret=interpret)
+            o = o.reshape(b, cw, cfg.num_heads * hd)
+            out = layers.linear_apply(p["o"], o, fmt, impl=impl,
+                                      interpret=interpret)
+            return out, cache
         kc = paged_view(kp, block_tables)
         vc = paged_view(vp, block_tables)
         kv_len = pos_mat + 1                # per-query causal depth
@@ -455,7 +478,8 @@ def mla_prefill(p, cfg, x, positions, *, fmt="none", impl="ref",
 
 
 def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
-               interpret=True, block_tables=None, lengths=None):
+               interpret=True, block_tables=None, lengths=None,
+               paged_impl: str = "fused"):
     """Absorbed-matmul MLA decode over a chunk of C tokens: the kv_b
     projection is folded into the query/output sides so the compressed
     cache is attended directly — no (B, S, H, D) expansion ever
@@ -464,22 +488,28 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     prefill), masking exactly like the GQA chunk path.
 
     With ``block_tables``, cache leaves are physical pages (NB, bs, ...)
-    and the compressed latents are scattered/gathered through the table,
-    same contract as the paged GQA path."""
+    and the compressed latents are scattered through the table. The
+    default ``paged_impl="fused"`` attends the pages in place: the fused
+    kernel takes the absorbed ``q_eff`` against the ckv pages (which are
+    also V) and joins the decoupled-RoPE scores via its q2/k2 operands —
+    compressed cache never expanded *and* never gathered. ``"ref"``
+    keeps the ``paged_view`` dense-gather oracle."""
     m = cfg.mla
     h = cfg.num_heads
     b, cw = x.shape[:2]
     pos_mat = decode_positions(position, b, cw)
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
         p, cfg, x, pos_mat, fmt, impl, interpret)
+    fused = block_tables is not None and paged_impl == "fused"
     if block_tables is not None:
         ckv_p = paged_insert_token(cache["ckv"], ckv_new, position,
                                    block_tables, lengths)
         krope_p = paged_insert_token(cache["krope"], krope_new, position,
                                      block_tables, lengths)
         cache = {"ckv": ckv_p, "krope": krope_p}
-        ckv = paged_view(ckv_p, block_tables)
-        krope = paged_view(krope_p, block_tables)
+        if not fused:
+            ckv = paged_view(ckv_p, block_tables)
+            krope = paged_view(krope_p, block_tables)
     else:
         ckv = _insert_kv(cache["ckv"], ckv_new, position, lengths)
         krope = _insert_kv(cache["krope"], krope_new, position, lengths)
@@ -493,6 +523,20 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
 
     qn = q_nope.astype(jnp.float32)                     # (b, q, h, nope)
     q_eff = jnp.einsum("bqhc,hcr->bqhr", qn, wk)        # (b, q, h, rank)
+    sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if fused:
+        base = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+        ctx = paged_decode_attention(
+            q_eff, ckv_p[:, :, None, :], None,       # ckv doubles as V
+            block_tables, base, sm_scale=sm,
+            q2=q_rope.astype(jnp.float32),
+            k2_pages=krope_p[:, :, None, :], lengths=lengths,
+            out_dtype=jnp.float32, interpret=interpret)  # (b, q, h, rank)
+        o = jnp.einsum("bqhr,hvr->bqhv", ctx, wv)
+        o = o.reshape(b, cw, h * m.v_head_dim).astype(x.dtype)
+        out = layers.linear_apply(p["o"], o, fmt, impl=impl,
+                                  interpret=interpret)
+        return out, cache
     if flags.mixed_intermediates():
         s_nope = jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(ckv.dtype), ckv,
                             preferred_element_type=jnp.float32)
@@ -506,7 +550,6 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
         s_rope = jnp.einsum("bqhe,bse->bhqs",
                             q_rope.astype(jnp.float32),
                             krope.astype(jnp.float32))
-    sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     sc = (s_nope + s_rope) * sm                         # (b, h, q, s)
     slen = ckv.shape[1]
     kv_len = pos_mat + 1                                # per-query depth

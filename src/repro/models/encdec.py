@@ -247,11 +247,12 @@ def encdec_encode_cross(params, cfg: ModelConfig, frames, *, quant="none",
 
 def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
                        quant="none", impl="ref", interpret=True,
-                       block_tables=None, lengths=None):
+                       block_tables=None, lengths=None, paged_impl="fused"):
     """Decode step over a chunk of C tokens (C == 1 classic).
     ``block_tables``: paged-arena tables for the decoder *self*-attn KV
-    (the cross KV is a constant-size per-slot state — never paged).
-    ``lengths``: (B,) valid chunk entries per row (chunked prefill)."""
+    (the cross KV is a constant-size per-slot state — never paged);
+    ``paged_impl`` selects the fused block-table kernel or the gather
+    oracle. ``lengths``: (B,) valid chunk entries per row."""
     recipe = layers.recipe_for(quant)
     fmt = recipe["linear"]
     b, cw = token.shape
@@ -270,7 +271,7 @@ def encdec_decode_step(params, cfg: ModelConfig, token, position, cache, *,
         mix, self_cache = attn.gqa_decode(
             lp["self_attn"], cfg, hn, position, lc["self"], fmt=fmt,
             impl=impl, interpret=interpret, block_tables=block_tables,
-            lengths=lengths)
+            lengths=lengths, paged_impl=paged_impl)
         h = h + mix
         hn = layers.layernorm_apply(lp["cross_norm"], h)
         q = layers.linear_apply(lp["cross_attn"]["q"], hn, fmt, impl=impl,

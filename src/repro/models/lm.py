@@ -132,24 +132,25 @@ def layer_prefill(p: Params, cfg: ModelConfig, h, positions, *, mixer, ffn,
 
 def layer_decode(p: Params, cfg: ModelConfig, h, position, cache, *,
                  mixer, ffn, fmt, impl, interpret, mrope_positions=None,
-                 block_tables=None, lengths=None):
+                 block_tables=None, lengths=None, paged_impl="fused"):
     """Decode layer step over a chunk of C tokens (C == 1 is the classic
     one-token step). Returns (h, new_cache). ``block_tables``:
     paged-arena tables threaded to the attention mixers (SSM states are
-    per-slot constants — paging does not apply). ``lengths``: (B,) valid
-    chunk entries per row (unified chunked prefill)."""
+    per-slot constants — paging does not apply); ``paged_impl`` selects
+    the fused block-table kernel or the gather oracle. ``lengths``: (B,)
+    valid chunk entries per row (unified chunked prefill)."""
     hn = layers.rmsnorm_apply(p["mixer_norm"], h, cfg.norm_eps)
     if mixer == "gqa":
         mix, cache = attn.gqa_decode(p["attn"], cfg, hn, position, cache,
                                      fmt=fmt, impl=impl, interpret=interpret,
                                      mrope_positions=mrope_positions,
                                      block_tables=block_tables,
-                                     lengths=lengths)
+                                     lengths=lengths, paged_impl=paged_impl)
     elif mixer == "mla":
         mix, cache = attn.mla_decode(p["attn"], cfg, hn, position, cache,
                                      fmt=fmt, impl=impl, interpret=interpret,
                                      block_tables=block_tables,
-                                     lengths=lengths)
+                                     lengths=lengths, paged_impl=paged_impl)
     else:
         mix, cache = ssm.ssm_decode(p["ssm"], cfg, hn, cache, fmt=fmt,
                                     impl=impl, interpret=interpret,
@@ -398,7 +399,7 @@ def _mrope_decode_positions(cfg: ModelConfig, pos_mat: jnp.ndarray):
 def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                    position, cache, *, quant="none", impl="ref",
                    interpret=True, block_tables=None, lengths=None,
-                   embeds=None, embeds_mask=None):
+                   paged_impl="fused", embeds=None, embeds_mask=None):
     """token: (B, C) int32 — C == 1 is the classic one-token step, C > 1
     a chunk of consecutive tokens (unified chunked prefill); position:
     scalar int32 (lockstep batch) or (B,) int32 base positions (per-slot
@@ -406,8 +407,9 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     ``lm_cache_shapes``. Returns (logits (B, C, V), new_cache).
 
     ``block_tables``: (B, max_blocks) int32 — paged-arena mode: attention
-    cache leaves are physical pages and K/V are read through a per-slot
-    block-table gather (see ``PagedKVArena``).
+    cache leaves are physical pages and K/V are read through the table
+    (see ``PagedKVArena``); ``paged_impl`` picks the fused block-table
+    Pallas kernel ("fused", default) or the dense-gather oracle ("ref").
 
     ``lengths``: (B,) valid chunk entries per row — cache writes past a
     row's length are dropped, and its tail logits are garbage by contract
@@ -437,7 +439,7 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                                     fmt=fmt, impl=impl, interpret=interpret,
                                     mrope_positions=mrope_pos,
                                     block_tables=block_tables,
-                                    lengths=lengths)
+                                    lengths=lengths, paged_impl=paged_impl)
             else:
                 c = {}
                 for i, (mx, ff) in enumerate(subs):
@@ -447,7 +449,8 @@ def lm_decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                                          interpret=interpret,
                                          mrope_positions=mrope_pos,
                                          block_tables=block_tables,
-                                         lengths=lengths)
+                                         lengths=lengths,
+                                         paged_impl=paged_impl)
                     c[f"sub{i}"] = ci
             return h, c
         h, new_cache = jax.lax.scan(body, h, (params[name], cache[name]),

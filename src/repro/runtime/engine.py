@@ -15,10 +15,11 @@ scheduler/executor/cache-manager stack):
                              arena[, block-tables]) with fused masked
                              per-slot sampling
 
-Unified chunked prefill (default, ``prefill_mode="chunked"``): there is
-NO separate prefill phase. Prompt tokens stream through the *same* jitted
-step as decode, up to ``chunk_size`` tokens per slot per iteration, so a
-single traced shape (slots, chunk) covers admission, prompt ingestion and
+Unified chunked prefill (the only prefill path — the legacy bucketed
+pass was retired after its one release of overlap): there is NO separate
+prefill phase. Prompt tokens stream through the *same* jitted step as
+decode, up to ``chunk_size`` tokens per slot per iteration, so a single
+traced shape (slots, chunk) covers admission, prompt ingestion and
 generation — zero re-jits and zero pow2 padding. A slot ingesting its
 prompt feeds `min(remaining, chunk)` tokens with sampling masked off; the
 step that consumes the final prompt token samples the first generated
@@ -26,21 +27,19 @@ token from that token's logits (index ``lengths-1``), and the slot then
 feeds one sampled token per step (``lengths == 1``). The transfer ledger
 charges prompt bytes per chunk actually transferred — no pow2 bucket
 waste — and the quantized linear weights stream once per *step* (all
-slots share the pass), not once per slot.
+slots share the pass), not once per slot. ``ModelAPI.prefill`` remains
+only for the lockstep/eval entry points (launch.dryrun, trainer eval,
+test oracles) — the serving runtime never calls it.
 
-Legacy bucketed prefill (``prefill_mode="bucketed"``, kept one release
-for the chunked≡bucketed differential tests): prefill runs the prompt's
-first L-1 tokens padded to a power-of-two bucket, the last prompt token
-is held back and consumed by the decode step.
-
-Paged mode: admission needs a free slot AND the initial block reservation
-— the whole prompt's ``ceil(prompt/block_size)`` blocks in bucketed mode,
-only the first *chunk's* blocks in chunked mode (reservation then follows
-chunk progress); each step reserves blocks covering every active slot's
-next feed; on allocator exhaustion the youngest sequence is preempted
-back to the queue (recompute). The block tables ride into the jitted step
-as a (num_slots, max_blocks) int32 argument, so mid-flight allocation
-never changes a traced shape.
+Paged mode: admission needs a free slot AND the first *chunk's* block
+reservation (reservation then follows chunk progress); each step reserves
+blocks covering every active slot's next feed; on allocator exhaustion
+the youngest sequence is preempted back to the queue (recompute). The
+block tables ride into the jitted step as a (num_slots, max_blocks) int32
+argument, so mid-flight allocation never changes a traced shape. Inside
+the step, paged K/V is attended by the fused block-table Pallas kernel
+(``paged_attn="fused"``, the default — per-step KV traffic O(live
+tokens)) or the legacy dense-gather oracle (``"ref"``, O(arena)).
 """
 from __future__ import annotations
 
@@ -67,13 +66,18 @@ class GenStats:
     decode_s: float = 0.0
     tokens_in: int = 0              # prompt tokens per sequence
     tokens_out: int = 0             # generated tokens per sequence
-    prefill_tokens: int = 0         # prompt tokens processed (chunked: all L;
-                                    # bucketed: the L-1 prefilled tokens)
+    prefill_tokens: int = 0         # prompt tokens streamed (all L)
     decode_tokens: int = 0          # tokens emitted by decode steps
     cache_bytes: int = 0
     peak_resident_bytes: float = 0.0    # max arena bytes pinned by live seqs
     resident_bytes_sum: float = 0.0     # per-step resident-bytes accumulator
     live_tokens_sum: int = 0            # per-step live-cache-token accumulator
+    # Paged decode attention KV *read* traffic, accumulated per step from
+    # the engine's real tables/positions (same modeled-from-real-schedule
+    # philosophy as the transfer ledger): the fused kernel fetches each
+    # slot's live blocks (clamped index map — O(live tokens)); the ref
+    # gather materializes every slot's full-table-width view (O(arena)).
+    paged_kv_read_bytes: float = 0.0
     transfers: Optional[TransferReport] = None
 
     @property
@@ -125,40 +129,30 @@ class ServeReport:
             if self.stats.e2e_s else 0.0
 
 
-def _bucket(n: int) -> int:
-    """Next power of two >= n (legacy prefill length buckets: a handful of
-    compilations cover every prompt length)."""
-    b = 1
-    while b < n:
-        b *= 2
-    return b
-
-
 class ServingEngine:
     """Continuous-batching executor over a fixed-slot KV arena."""
 
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  num_slots: int = 4, max_seq: int = 2048, impl: str = "ref",
-                 prefill_mode: str = "chunked", chunk_size: int = 8,
+                 chunk_size: int = 8,
                  step_token_budget: Optional[int] = None,
                  top_k: int = 0, top_p: float = 1.0,
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
+                 paged_attn: str = "fused",
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
                  cache_dtype=jnp.bfloat16):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
-        if prefill_mode not in ("chunked", "bucketed"):
-            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if paged_attn not in ("fused", "ref"):
+            raise ValueError(f"unknown paged_attn {paged_attn!r}")
         self.model = model
         self.params = params
         self.quant = quant
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.impl = impl
-        self.prefill_mode = prefill_mode
-        self.chunked = prefill_mode == "chunked"
         self.chunk_size = max(1, min(chunk_size, max_seq))
         self.step_token_budget = step_token_budget
         # Engine-level defaults, used when a request leaves them unset
@@ -166,57 +160,39 @@ class ServingEngine:
         # mixed streams share one compilation).
         self.top_k, self.top_p = top_k, top_p
         self.paged = block_size is not None
+        self.paged_attn = paged_attn
         self.cache_dtype = cache_dtype
         self._block_size, self._num_blocks = block_size, num_blocks
         self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
                                host_sampling=host_sampling)
-        self._vlm = model.cfg.family == "vlm" and self.chunked
+        self._vlm = model.cfg.family == "vlm"
         self._fresh_arena_sched()
         self._step_compiles = 0
 
         kw = dict(quant=quant, impl=impl)
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, **kw))
         self._encode_cross = jax.jit(
             lambda p, f: model.encode_cross(p, f, **kw)) \
             if model.encode_cross is not None else None
 
-        if self.chunked:
-            def step(p, tokens, pos0, lengths, active, arena, key, temps,
-                     top_ks, top_ps, *rest):
-                kw2 = dict(kw)
-                rest = list(rest)
-                if self.paged:
-                    kw2["block_tables"] = rest.pop(0)
-                if self._vlm:
-                    kw2["embeds"] = rest.pop(0)
-                    kw2["embeds_mask"] = rest.pop(0)
-                logits, arena = model.decode_step(p, tokens, pos0, arena,
-                                                  lengths=lengths, **kw2)
-                idx = jnp.maximum(lengths - 1, 0)
-                last = jnp.take_along_axis(
-                    logits, idx[:, None, None], axis=1)[:, 0]
-                nxt = sampling.sample_slots(last, key, temps, active,
-                                            top_k=top_ks, top_p=top_ps)
-                return nxt, arena
-        elif self.paged:
-            def step(p, tokens, pos0, lengths, active, arena, key, temps,
-                     top_ks, top_ps, tables):
-                logits, arena = model.decode_step(p, tokens, pos0, arena,
-                                                  block_tables=tables, **kw)
-                nxt = sampling.sample_slots(logits[:, -1], key, temps,
-                                            active, top_k=top_ks,
-                                            top_p=top_ps)
-                return nxt, arena
-        else:
-            def step(p, tokens, pos0, lengths, active, arena, key, temps,
-                     top_ks, top_ps):
-                logits, arena = model.decode_step(p, tokens, pos0, arena,
-                                                  **kw)
-                nxt = sampling.sample_slots(logits[:, -1], key, temps,
-                                            active, top_k=top_ks,
-                                            top_p=top_ps)
-                return nxt, arena
+        def step(p, tokens, pos0, lengths, active, arena, key, temps,
+                 top_ks, top_ps, *rest):
+            kw2 = dict(kw)
+            rest = list(rest)
+            if self.paged:
+                kw2["block_tables"] = rest.pop(0)
+                kw2["paged_impl"] = paged_attn
+            if self._vlm:
+                kw2["embeds"] = rest.pop(0)
+                kw2["embeds_mask"] = rest.pop(0)
+            logits, arena = model.decode_step(p, tokens, pos0, arena,
+                                              lengths=lengths, **kw2)
+            idx = jnp.maximum(lengths - 1, 0)
+            last = jnp.take_along_axis(
+                logits, idx[:, None, None], axis=1)[:, 0]
+            nxt = sampling.sample_slots(last, key, temps, active,
+                                        top_k=top_ks, top_p=top_ps)
+            return nxt, arena
         self._step = jax.jit(step,
                              donate_argnums=(5,) if donate_cache else ())
 
@@ -231,8 +207,7 @@ class ServingEngine:
         else:
             self.arena = KVArena(self.model, self.num_slots, self.max_seq,
                                  dtype=self.cache_dtype)
-        self.sched = Scheduler(self.num_slots, self.max_seq,
-                               chunked=self.chunked)
+        self.sched = Scheduler(self.num_slots, self.max_seq)
 
     def reset(self) -> None:
         """Fresh arena + scheduler, warm jit caches — serve() runs are
@@ -242,22 +217,19 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _try_admit(self, seq: Sequence) -> Optional[int]:
         """Arena-side admission gate. Contiguous arena: any free slot.
-        Paged arena: a free slot AND the initial reservation, all-or-
-        nothing — the whole prompt's blocks in bucketed mode (the padded
-        prefill writes them all at once), only the first chunk's blocks in
-        chunked mode (reservation then follows chunk progress)."""
+        Paged arena: a free slot AND the first chunk's block reservation,
+        all-or-nothing (reservation then follows chunk progress)."""
         if not self.paged:
             return self.arena.alloc()
-        first = seq.req.prompt_len if not self.chunked \
-            else min(seq.req.prompt_len, self.chunk_size)
+        first = min(seq.req.prompt_len, self.chunk_size)
         return self.arena.alloc_slot(self.arena.blocks_needed(first))
 
     def _admit_chunked(self, seq: Sequence, stats: GenStats,
                        ledger: TransferLedger) -> None:
         """Chunked admission: no prefill pass. Reset the slot's constant
-        state leaves (the bucketed path overwrote them via write_prefill);
-        enc-dec models additionally run the one-time encoder pass and
-        scatter the cross KV into the slot."""
+        state leaves (stale recurrent/cross state from the previous
+        occupant); enc-dec models additionally run the one-time encoder
+        pass and scatter the cross KV into the slot."""
         self.arena.reset_slot(seq.slot)
         if self.paged:
             ledger.charge_cache_growth(
@@ -276,45 +248,6 @@ class ServingEngine:
                 x.size * x.dtype.itemsize
                 for x in jax.tree.leaves(cache["dec_layers"]["cross"]))
             ledger.charge_cache_growth("prefill", cross_bytes)
-
-    def _admit_prefill(self, seq: Sequence, stats: GenStats,
-                       ledger: TransferLedger) -> None:
-        """Legacy bucketed prefill for one admitted sequence: run the
-        prompt's first L-1 tokens padded to a pow2 bucket and write the
-        cache into the arena slot.
-
-        Recurrent families (ssm/hybrid) prefill at the *exact* prompt
-        length: pad tokens advance the SSM state (there is no kv_len mask
-        for a recurrence), so bucket padding silently corrupts it — a
-        latent bug of the padded-prefill design that the unified chunked
-        step does not have (its invalid tail never touches state). The
-        price is one prefill compilation per distinct prompt length,
-        which is why this path is legacy."""
-        L = seq.req.prompt_len
-        pre_len = L - 1                       # last prompt token held back
-        bucketable = self.model.cfg.family not in ("ssm", "hybrid")
-        P = min(_bucket(pre_len), self.max_seq) if bucketable else pre_len
-        toks = np.zeros((1, P), np.int32)
-        toks[0, :pre_len] = seq.req.tokens[:pre_len]
-        batch = {"tokens": jnp.asarray(toks)}
-        if seq.req.extras:
-            batch.update(seq.req.extras)
-
-        t0 = time.perf_counter()
-        _, cache = self._prefill(self.params, batch)
-        self.arena.write_prefill(cache, seq.slot)
-        jax.block_until_ready(jax.tree.leaves(self.arena.buffers)[0])
-        stats.prefill_s += time.perf_counter() - t0
-        stats.prefill_tokens += pre_len
-        ledger.charge_prefill(P)
-        if self.paged:
-            # Block-granular cache growth: the admission reservation.
-            ledger.charge_cache_growth(
-                "prefill", len(self.arena.slot_blocks(seq.slot))
-                * self.arena.block_bytes())
-        else:
-            ledger.charge_cache_growth("prefill",
-                                       pre_len * self.arena.token_bytes())
 
     def _preempt(self, seq: Sequence) -> None:
         """Recompute-preemption: reclaim the victim's slot and blocks and
@@ -453,6 +386,25 @@ class ServingEngine:
         stats.live_tokens_sum += int(sum(
             s.position + feeds[slot]
             for slot, s in self.sched.active.items()))
+        if self.paged and self.arena.has_paged:
+            bsz, mb = self.arena.block_size, self.arena.max_blocks
+            if self.paged_attn == "fused":
+                # The kernel's exact fetch count: a slot row walks blocks
+                # 0..(pos0 + max(lengths,1) - 1)//bs (its last *valid*
+                # query's causal depth; dead trailing grid steps clamp to
+                # that block), and Pallas elides the fetch whenever the
+                # resolved page repeats — so count distinct consecutive
+                # pages in each row's clamped walk (an idle slot's
+                # all-null row costs exactly one null-page fetch).
+                tb = self.arena.tables
+                blocks = 0
+                for s in range(ns):
+                    depth = int(pos0[s]) + max(int(lens[s]), 1) - 1
+                    walk = tb[s, :min(depth // bsz, mb - 1) + 1]
+                    blocks += 1 + int(np.sum(walk[1:] != walk[:-1]))
+            else:
+                blocks = ns * mb        # dense gather of every table row
+            stats.paged_kv_read_bytes += blocks * self.arena.block_bytes()
         tok_bytes = 0.0 if self.paged else self.arena.token_bytes()
         for slot, seq in list(self.sched.active.items()):
             n = feeds[slot]
@@ -475,54 +427,6 @@ class ServingEngine:
                 ledger.charge_sampled()
                 seq.record_token(int(nxt_host[slot]), now)
                 stats.decode_tokens += 1
-        self.sched.record_step()
-        self.sched.retire(self.arena.free)
-
-    def _decode_once(self, key, stats: GenStats, ledger: TransferLedger,
-                     t0: float) -> None:
-        """Legacy bucketed mode: one masked single-token decode step over
-        every arena slot."""
-        ns = self.num_slots
-        tokens = np.zeros((ns, 1), np.int32)
-        positions = np.zeros((ns,), np.int32)
-        lens = np.ones((ns,), np.int32)
-        active = np.zeros((ns,), bool)
-        for slot, seq in self.sched.active.items():
-            tokens[slot, 0] = seq.next_token
-            positions[slot] = seq.position
-            active[slot] = True
-        temps, top_ks, top_ps = self._sampling_vectors(self.sched.active)
-
-        t_step = time.perf_counter()
-        before = self._jit_cache_size()
-        step_args = [self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                     jnp.asarray(lens), jnp.asarray(active),
-                     self.arena.buffers, key, jnp.asarray(temps),
-                     jnp.asarray(top_ks), jnp.asarray(top_ps)]
-        if self.paged:
-            dev_tables, uploaded = self.arena.device_tables()
-            step_args.append(dev_tables)
-            if uploaded:        # dirty tables only: admission/growth/preempt
-                ledger.charge("decode", "tables", "h2d", uploaded)
-        nxt, self.arena.buffers = self._step(*step_args)
-        nxt_host = np.asarray(nxt)            # blocks until step completes
-        t_end = time.perf_counter()
-        stats.decode_s += t_end - t_step
-        now = t_end - t0
-        self._step_compiles += self._jit_cache_size() - before
-
-        resident = self.arena.resident_bytes()
-        stats.peak_resident_bytes = max(stats.peak_resident_bytes, resident)
-        stats.resident_bytes_sum += resident
-        stats.live_tokens_sum += int(sum(
-            s.position + 1 for s in self.sched.active.values()))
-        for slot, seq in list(self.sched.active.items()):
-            ledger.charge_decode_step(int(positions[slot]) + 1)
-            if not self.paged:      # paged growth is charged per block
-                ledger.charge_cache_growth("decode",
-                                           self.arena.token_bytes())
-            seq.record_token(int(nxt_host[slot]), now)
-            stats.decode_tokens += 1
         self.sched.record_step()
         self.sched.retire(self.arena.free)
 
@@ -568,11 +472,7 @@ class ServingEngine:
                 self._reserve_blocks(ledger)
             admitted = self.sched.admit(self._try_admit, now)
             for seq in admitted:
-                if self.chunked:
-                    self._admit_chunked(seq, stats, ledger)
-                else:
-                    self._admit_prefill(seq, stats, ledger)
-                    seq.start_decode()
+                self._admit_chunked(seq, stats, ledger)
             if not self.sched.active:
                 if self.sched.queue:
                     continue    # preempted/starved: blocks freed, re-admit
@@ -585,10 +485,7 @@ class ServingEngine:
                     self.sched.poll_arrivals(float("inf"))
                 continue
             key, sub = jax.random.split(key)
-            if self.chunked:
-                self._step_once(sub, stats, ledger, t0)
-            else:
-                self._decode_once(sub, stats, ledger, t0)
+            self._step_once(sub, stats, ledger, t0)
 
         stats.cache_bytes = self.arena.nbytes()
         stats.tokens_in = sum(r.prompt_len for r in requests)
@@ -613,14 +510,12 @@ class Engine:
 
     def __init__(self, model: ModelAPI, params, *, quant: str = "none",
                  max_seq: int = 2048, impl: str = "ref",
-                 prefill_mode: str = "chunked", chunk_size: int = 8,
-                 donate_cache: bool = True):
+                 chunk_size: int = 8, donate_cache: bool = True):
         self.model = model
         self.params = params
         self.quant = quant
         self.max_seq = max_seq
         self.impl = impl
-        self.prefill_mode = prefill_mode
         self.chunk_size = chunk_size
         self.donate_cache = donate_cache
         self._engines: Dict[int, ServingEngine] = {}    # batch -> engine
@@ -638,7 +533,7 @@ class Engine:
             self._engines[batch] = ServingEngine(
                 self.model, self.params, quant=self.quant,
                 num_slots=batch, max_seq=self.max_seq, impl=self.impl,
-                prefill_mode=self.prefill_mode, chunk_size=self.chunk_size,
+                chunk_size=self.chunk_size,
                 donate_cache=self.donate_cache)
         else:
             # fresh arena/scheduler, warm jit caches

@@ -22,9 +22,12 @@ prefill, account bytes):
   Constant-size states (SSM recurrent state, enc-dec cross KV) are not
   paged: they keep per-slot storage and a degenerate one-block table.
 
-Decode steps read K/V *through* the block table inside the jitted step
-(per-slot gather), so block allocation mid-decode never changes a traced
-shape — continuous batching and paging compose without re-jit.
+Decode steps read K/V *through* the block table inside the jitted step —
+by default via the fused paged-attention Pallas kernel, which resolves
+(slot, kv_block) -> physical page through scalar-prefetched tables (see
+``PagedKVArena.page_layout`` for the layout contract) — so block
+allocation mid-decode never changes a traced shape: continuous batching
+and paging compose without re-jit.
 """
 from __future__ import annotations
 
@@ -47,6 +50,54 @@ def allocate(model: ModelAPI, batch: int, max_seq: int,
     def mk(x):
         return jnp.zeros(x, dtype) if isinstance(x, tuple) else x
     return jax.tree.map(mk, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# Probe results keyed by (model identity, shapes, dtype); the model
+# object is kept in the value so its id() can never be recycled while
+# the entry lives. ServingEngine.reset() rebuilds arenas — without this
+# every reset would re-trace the whole decode graph abstractly.
+_STEP_DTYPE_CACHE: dict = {}
+
+
+def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
+                     const_flags: Tuple[bool, ...]) -> Tuple:
+    """Per-leaf arena storage dtypes (flattened leaf order).
+
+    Seq-indexed KV leaves store the requested cache ``dtype`` (the decode
+    step casts its inserts to match). Constant-size *state* leaves (SSM
+    recurrent/conv state, enc-dec cross KV) instead store whatever dtype
+    the decode step **emits** at fixed point — probed with
+    ``jax.eval_shape`` over abstract params, so no allocation or compile
+    (memoized per (model, shapes, dtype): arena rebuilds don't re-trace).
+    Without this, a bf16 arena hands the SSM recurrence a bf16 state and
+    gets an f32 one back: the second step sees new traced dtypes and
+    recompiles (the ssm/hybrid "one extra step compile" ROADMAP item).
+    Pure-attention models skip the probe entirely (no const leaves)."""
+    if not any(const_flags):
+        return tuple(dtype for _ in const_flags)
+    key = (id(model), batch, max_seq, jnp.dtype(dtype).name, const_flags)
+    hit = _STEP_DTYPE_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    specs = model.cache_specs(batch, max_seq, dtype)
+    params = model.abstract_params()
+    token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    for _ in range(3):                     # tiny fixed-point iteration
+        _, out = jax.eval_shape(model.decode_step, params, token, pos,
+                                specs)
+        emitted = tuple(x.dtype for x in jax.tree.leaves(out))
+        leaves, treedef = jax.tree.flatten(specs)
+        if emitted == tuple(x.dtype for x in leaves):
+            break
+        specs = treedef.unflatten(
+            [jax.ShapeDtypeStruct(leaf.shape, dt)
+             for leaf, dt in zip(leaves, emitted)])
+    probed = tuple(x.dtype for x in jax.tree.leaves(specs))
+    out = tuple(pd if const else jnp.dtype(dtype)
+                for pd, const in zip(probed, const_flags))
+    _STEP_DTYPE_CACHE[key] = (model, out)
+    return out
 
 
 class _FreeHeap:
@@ -137,13 +188,11 @@ class KVArena:
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.dtype = dtype
-        self.buffers = allocate(model, num_slots, max_seq, dtype)
         self._free = _FreeHeap(num_slots)
         # Leaves whose extent does NOT follow the sequence length (SSM
         # recurrent/conv state, enc-dec cross KV) carry *state*, not
-        # masked history — chunked admission must zero them (the bucketed
-        # path overwrote them via write_prefill). Probe two seq lengths
-        # and flag the leaves that did not move.
+        # masked history — chunked admission must zero them. Probe two
+        # seq lengths and flag the leaves that did not move.
         is_shape = lambda x: isinstance(x, tuple)
         ta = jax.tree.leaves(model.cache_shapes(num_slots, 160),
                              is_leaf=is_shape)
@@ -151,6 +200,14 @@ class KVArena:
                              is_leaf=is_shape)
         self._const_flags: Tuple[bool, ...] = tuple(
             a == b for a, b in zip(ta, tb))
+        # Per-leaf storage dtypes: state leaves keep the dtype the decode
+        # step emits (f32 SSM state), so step 1 never re-traces.
+        self._leaf_dtypes = step_leaf_dtypes(model, num_slots, max_seq,
+                                             dtype, self._const_flags)
+        shapes = model.cache_shapes(num_slots, max_seq)
+        leaves, treedef = jax.tree.flatten(shapes, is_leaf=is_shape)
+        self.buffers = treedef.unflatten(
+            [jnp.zeros(s, dt) for s, dt in zip(leaves, self._leaf_dtypes)])
 
     # -- slot lifecycle -------------------------------------------------
     @property
@@ -219,8 +276,8 @@ def _arena_insert(arena, prefill_cache, slot):
 @functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
 def _zero_const_leaves(leaves, slot, const_flags):
     """Zero the constant-size (non-seq-indexed) leaves of one arena slot
-    — chunked admission's stand-in for the bucketed prefill overwrite.
-    ``slot`` is traced, so every slot shares one compilation."""
+    so a fresh admission never sees its predecessor's recurrent/cross
+    state. ``slot`` is traced, so every slot shares one compilation."""
     out = []
     for a, is_const in zip(leaves, const_flags):
         if not is_const:
@@ -243,7 +300,7 @@ def _paged_insert(buf_leaves, cache_leaves, phys, slot, paged_flags):
     arena's bucket padding; positions past the reservation are dropped).
     Constant leaves: buffer (L, num_slots, ...), written at ``slot``.
     Static ``paged_flags`` keeps one compilation per (cache shape, block
-    count) pair — bucketed prompts bound the compile count.
+    count) pair — prefill-cache shapes bound the compile count.
     """
     nbw = phys.shape[0]
     out = []
@@ -300,10 +357,17 @@ class PagedKVArena:
 
         shapes, paged = model.paged_cache_shapes(num_slots, num_blocks + 1,
                                                  block_size)
-        self.buffers = jax.tree.map(
-            lambda x: jnp.zeros(x, dtype) if isinstance(x, tuple) else x,
-            shapes, is_leaf=lambda x: isinstance(x, tuple))
         self._paged_flags: Tuple[bool, ...] = tuple(jax.tree.leaves(paged))
+        # Per-leaf dtypes: non-paged state leaves store what the decode
+        # step emits (f32 SSM state) — same one-compile guarantee as the
+        # slot arena; paged page leaves store the requested cache dtype.
+        self._leaf_dtypes = step_leaf_dtypes(
+            model, num_slots, max_seq, dtype,
+            tuple(not f for f in self._paged_flags))
+        is_shape = lambda x: isinstance(x, tuple)
+        leaves, treedef = jax.tree.flatten(shapes, is_leaf=is_shape)
+        self.buffers = treedef.unflatten(
+            [jnp.zeros(s, dt) for s, dt in zip(leaves, self._leaf_dtypes)])
         self.has_paged = any(self._paged_flags)
         # Shape-static byte quantities, precomputed once (resident_bytes
         # runs on the per-step hot path).
@@ -324,6 +388,25 @@ class PagedKVArena:
         self.table_uploads = 0
 
     # -- queries ---------------------------------------------------------
+    def page_layout(self) -> dict:
+        """The page/table layout contract the fused paged-attention
+        kernel (``kernels/paged_attention.py``) consumes:
+
+        * paged leaves are ``(num_pages, block_size, ...)`` physical
+          pages with ``num_pages == num_blocks + 1`` — the trailing page
+          (id ``null_block``) is the **null sentinel**;
+        * every slot's block-table row is padded to ``max_blocks``
+          entries; entries past the slot's allocation hold
+          ``null_block``. Null-page contents are finite garbage (zeros,
+          or stale inactive-slot writes) and always sit past ``kv_len``,
+          so the kernel masks them before the softmax — no
+          data-dependent guard needed inside the jitted step.
+        """
+        return {"block_size": self.block_size,
+                "max_blocks": self.max_blocks,
+                "num_pages": self.num_blocks + 1,
+                "null_block": self.null_block}
+
     @property
     def free_slots(self) -> int:
         return len(self._free_slots)
@@ -412,14 +495,15 @@ class PagedKVArena:
 
     # -- storage ---------------------------------------------------------
     def write_prefill(self, prefill_cache, slot: int) -> None:
-        """Scatter a B=1 prefill cache into ``slot``'s reserved blocks.
-        The bucketed prefill length P may overrun the reservation (bucket
-        jump past ceil(prompt/block)); the overrun is pad garbage and is
-        routed to the null block — every dropped position is rewritten by
-        the decode step before first use, exactly like slot-arena bucket
-        padding. The scatter width is always ``blocks_for(P)`` (real
-        blocks first, null-block padding after), so the jit trace count
-        tracks the prompt *buckets*, not per-prompt reservation sizes."""
+        """Scatter a B=1 prefill cache into ``slot``'s reserved blocks
+        (serving uses this only for the enc-dec admission-time encoder
+        pass; lockstep/eval callers may hand in padded prefill caches).
+        A padded length P may overrun the reservation; the overrun is pad
+        garbage and is routed to the null block — every dropped position
+        is rewritten by the decode step before first use. The scatter
+        width is always ``blocks_for(P)`` (real blocks first, null-block
+        padding after), so the jit trace count tracks the prefill-cache
+        shapes, not per-prompt reservation sizes."""
         leaves = jax.tree.leaves(prefill_cache)
         phys_ids = self._slot_blocks[slot][:1]
         if self.has_paged:

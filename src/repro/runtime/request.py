@@ -8,19 +8,12 @@ scheduler wraps it in a ``Sequence`` — the engine-side state machine
                ^  |        |
                +--+--------+ preempt  (paged arena exhausted: back to QUEUED)
 
-PREFILL has two executions sharing one state machine:
-
-* chunked (default engine mode): the prompt streams through the *same*
-  jitted step as decode, up to ``chunk`` tokens per engine iteration
-  (``fed`` tracks progress); the step that consumes the final prompt
-  token also samples the first generated token, then the sequence flips
-  to DECODE and feeds one sampled token per step.
-* bucketed (legacy ``--prefill-mode bucketed``): the prompt's first L-1
-  tokens run through a separate padded prefill pass and DECODE starts
-  from the held-back last prompt token.
-
-Either way *every* sampled token flows through the jitted masked decode
-step (no host-side prefill sampling special case).
+PREFILL streams the prompt through the *same* jitted step as decode, up
+to ``chunk`` tokens per engine iteration (``fed`` tracks progress); the
+step that consumes the final prompt token also samples the first
+generated token, then the sequence flips to DECODE and feeds one sampled
+token per step. *Every* sampled token flows through the jitted masked
+decode step (no host-side prefill sampling special case).
 
 Preemption is recompute-style: the victim's KV blocks are reclaimed and
 the sequence restarts from its prompt on re-admission (greedy decodes
@@ -99,21 +92,15 @@ class Sequence:
     def tokens_out(self) -> int:
         return len(self.generated)
 
-    def admit(self, slot: int, now: float, chunked: bool = False) -> None:
+    def admit(self, slot: int, now: float) -> None:
         assert self.state is SeqState.QUEUED
         self.state = SeqState.PREFILL
         self.slot = slot
         self.t_admitted = now
         self.fed = 0
-        if chunked:
-            # The prompt streams through the unified step from position 0.
-            self.position = 0
-            self.next_token = int(self.req.tokens[0])
-        else:
-            # Bucketed prefill covers tokens [0, L-1); the decode loop
-            # consumes the held-back token L-1.
-            self.position = self.req.prompt_len - 1
-            self.next_token = int(self.req.tokens[-1])
+        # The prompt streams through the unified step from position 0.
+        self.position = 0
+        self.next_token = int(self.req.tokens[0])
 
     # -- chunked prompt streaming ----------------------------------------
     @property

@@ -11,21 +11,20 @@ Admission gates:
     has passed (request-stream replay);
   * capacity — the engine's ``admit_fn(seq)`` returns a slot only when
     the arena can host the sequence (a free slot for the contiguous
-    arena; a free slot AND the initial block reservation for the paged
-    arena — the whole prompt's blocks in bucketed mode, only the *first
-    chunk's* blocks in chunked mode, since reservation then follows chunk
-    progress). FCFS is strict: a refused head-of-queue blocks later
-    arrivals rather than being skipped.
+    arena; a free slot AND the *first chunk's* block reservation for the
+    paged arena, since reservation then follows chunk progress). FCFS is
+    strict: a refused head-of-queue blocks later arrivals rather than
+    being skipped.
   * sequence budget — prompt_len + max_new_tokens must fit max_seq.
 
-Chunked mode (``chunked=True``, the default engine path): admission is a
-*token-budget* decision rather than a whole-prompt-prefill commitment —
-an admitted prompt streams through the unified step at up to ``chunk``
-tokens per iteration, and the per-step token budget (``num_slots x
-chunk``, optionally capped lower by the engine's ``step_token_budget``)
-is divided decode-first, then oldest-prefill-first; a prefilling slot
-that gets no budget this step simply feeds zero tokens (counted in
-``stats.deferred_feeds``) and resumes next step.
+Admission is a *token-budget* decision rather than a whole-prompt
+commitment — an admitted prompt streams through the unified step at up
+to ``chunk`` tokens per iteration, and the per-step token budget
+(``num_slots x chunk``, optionally capped lower by the engine's
+``step_token_budget``) is divided decode-first, then
+oldest-prefill-first; a prefilling slot that gets no budget this step
+simply feeds zero tokens (counted in ``stats.deferred_feeds``) and
+resumes next step.
 
 Preemption (paged arena only): when decode crosses a block boundary and
 the allocator is exhausted, the engine preempts the *youngest* admitted
@@ -59,10 +58,9 @@ class SchedulerStats:
 
 
 class Scheduler:
-    def __init__(self, num_slots: int, max_seq: int, chunked: bool = False):
+    def __init__(self, num_slots: int, max_seq: int):
         self.num_slots = num_slots
         self.max_seq = max_seq
-        self.chunked = chunked
         self.pending: Deque[Sequence] = deque()     # submitted, not arrived
         self.queue: Deque[Sequence] = deque()       # arrived, waiting on slot
         self.active: Dict[int, Sequence] = {}       # slot -> sequence
@@ -101,7 +99,7 @@ class Scheduler:
             if slot is None:
                 break
             seq = self.queue.popleft()
-            seq.admit(slot, now, chunked=self.chunked)
+            seq.admit(slot, now)
             seq.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.active[slot] = seq

@@ -26,17 +26,21 @@ of a generation to a (phase, category, direction) cell:
 
 Two charging schemes share the ledger:
 
-* legacy bucketed (``charge_prefill`` + ``charge_decode_step``): one
-  padded prefill pass per prompt (weights + pow2-padded act bytes) and a
-  full per-slot weight stream every decode step — the paper's
-  single-request llama.cpp execution model.
+* analytic single-stream (``charge_prefill`` + ``charge_decode_step``):
+  one whole-prompt prefill pass and a full per-sequence weight stream
+  every decode step — the paper's single-request llama.cpp execution
+  model. The serving engine no longer runs this way (the bucketed
+  prefill path was retired); these charges remain the *offline* replay
+  used by bench_e2e_latency.py and the modeled-bucketed comparison in
+  bench_serving.py.
 * unified chunked step (``charge_step_weights`` + ``charge_chunk`` +
-  ``charge_sampled``): the quantized *linear* weights stream once per
-  step — every slot's chunk shares the pass — while per-slot charges
-  cover exactly the tokens actually fed (token ids, activation staging,
-  output drain, and the slot's own KV stream). No pow2 padding bytes, no
-  N-times-replicated weight stream: this is what makes chunked prefill's
-  bytes/token measurably lower at equal workload in bench_serving.py.
+  ``charge_sampled``) — what the live engine charges: the quantized
+  *linear* weights stream once per step — every slot's chunk shares the
+  pass — while per-slot charges cover exactly the tokens actually fed
+  (token ids, activation staging, output drain, and the slot's own KV
+  stream). No pow2 padding bytes, no N-times-replicated weight stream:
+  this is what makes chunked prefill's bytes/token measurably lower at
+  equal workload in bench_serving.py.
 
 Kernel-byte math comes from `core/offload.py`'s ``KernelCall`` accounting
 (`phase_transfer_bytes` / `model_kernel_calls`), optionally filtered by
@@ -155,7 +159,8 @@ class TransferLedger:
         slot's own KV stream at depth ``kv_len``. Prefill chunks count
         toward the prefill token tally; decode feedback tokens are counted
         by ``charge_sampled`` (one per *generated* token), keeping
-        bytes_per_token's denominator comparable with the bucketed path."""
+        bytes_per_token's denominator comparable with the analytic
+        single-stream replay."""
         self.charge(phase, "tokens", H2D, new_tokens * 4)
         _, w_kv, a, o = self._split_kernel_bytes(kv_len, new_tokens)
         self.charge(phase, "weights", H2D, w_kv)
@@ -227,6 +232,30 @@ class TransferLedger:
             lines.append(line)
         lines.append(f"bytes/generated-token: {self.bytes_per_token()/1e6:.3f} MB")
         return lines
+
+
+def bucketed_replay_ledger(cfg: ModelConfig, quant: str, workload,
+                           max_seq: int) -> TransferLedger:
+    """The retired bucketed engine's exact ledger, replayed analytically.
+
+    ``workload``: iterable of (prompt_len, max_new_tokens). The legacy
+    charges were per-slot and additive — ``charge_prefill`` per request
+    at its pow2 bucket (recurrent ssm/hybrid families prefilled at
+    exact length: pad tokens would advance the SSM state),
+    ``charge_decode_step`` per generated token at its KV depth — so
+    this reproduces what that engine charged for the stream at *any*
+    occupancy/schedule. Single source of truth for the bench_serving
+    regression gate and the test_chunked_prefill acceptance pin."""
+    pow2 = lambda n: 1 << max(n - 1, 0).bit_length()
+    bucketable = cfg.family not in ("ssm", "hybrid")
+    led = TransferLedger(cfg, quant)
+    for prompt_len, gen in workload:
+        P = min(pow2(prompt_len - 1), max_seq) if bucketable \
+            else prompt_len - 1
+        led.charge_prefill(P)
+        for i in range(gen):
+            led.charge_decode_step(prompt_len + i)
+    return led
 
 
 @dataclasses.dataclass
