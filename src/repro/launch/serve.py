@@ -24,6 +24,17 @@ is attended by the fused block-table Pallas kernel by default;
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
       --slots 8 --block-size 8 --num-blocks 16 --paged-attn fused
 
+Speculative decoding (propose k tokens, verify them in ONE unified step,
+amortize the per-step weight stream by the accept length — §V.A's
+transfer bottleneck attacked at the system level). ``--spec ngram`` is
+the model-free prompt-lookup drafter; ``--spec draft`` runs a small
+draft model (own arena, own ledger account):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
+      --spec ngram --spec-k 4 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+      --requests 8 --spec draft --spec-draft-model qwen3-0.6b
+
 Batch mode (legacy lockstep interface, kept for the paper's fixed [in:out]
 workload grid):
 
@@ -92,6 +103,21 @@ def offload_decisions(cfg, quant: str, seq: int, n_out: int):
     return OffloadPolicy(asic_28nm()).decide_table(prefill, by_name)
 
 
+def build_draft(args):
+    """Draft model + params for ``--spec draft`` (reduced tracks the
+    target's --reduced; params are quantized with the serve quant so the
+    draft's ledger account charges the same recipe)."""
+    dcfg = get_config(args.spec_draft_model)
+    if args.reduced:
+        dcfg = dcfg.reduced()
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(args.seed + 17))
+    if args.quant != "none":
+        from repro.core import convert
+        dparams = convert.quantize_params(dparams, args.quant)
+    return dmodel, dparams
+
+
 def run_stream(cfg, model, params, args) -> None:
     rng = np.random.RandomState(args.seed)
     reqs = build_stream(cfg, args, rng)
@@ -101,12 +127,17 @@ def run_stream(cfg, model, params, args) -> None:
     if args.quant != "none":
         from repro.core import convert
         params = convert.quantize_params(params, args.quant)
+    draft_model = draft_params = None
+    if args.spec == "draft":
+        draft_model, draft_params = build_draft(args)
     engine = ServingEngine(
         model, params, quant=args.quant, num_slots=args.slots,
         max_seq=max_seq, offload_decisions=decisions,
         chunk_size=args.chunk_size,
         block_size=args.block_size or None, num_blocks=args.num_blocks
-        or None, paged_attn=args.paged_attn,
+        or None, paged_attn=args.paged_attn or "fused",
+        spec=args.spec, spec_k=args.spec_k or 4,
+        spec_draft_model=draft_model, spec_draft_params=draft_params,
         host_sampling=args.host_sampling)
 
     report = engine.serve(reqs, seed=args.seed)
@@ -134,6 +165,17 @@ def run_stream(cfg, model, params, args) -> None:
               f"{report.sched.preemptions} | resident/token "
               f"{st.resident_bytes_per_token:.0f} B | peak resident "
               f"{st.peak_resident_bytes/1e6:.2f} MB")
+    if engine.spec != "off":
+        print(f"  speculative[{engine.spec} k={engine.spec_k}]: "
+              f"accept {st.spec_accepted}/{st.spec_proposed} "
+              f"({st.spec_accept_rate*100:.0f}%) | rolled back "
+              f"{st.spec_rolled_back} tok | steps/token "
+              f"{st.steps_per_token:.3f} | weight-stream/token "
+              f"{st.transfers.weight_stream_bytes_per_token/1e6:.3f} MB | "
+              f"lanes trimmed {report.sched.spec_lanes_trimmed}")
+        if st.draft_transfers is not None:
+            print(f"  draft account: {st.draft_transfers.bytes_per_token/1e6:.3f}"
+                  f" MB/proposal ({engine._proposer.steps} draft steps)")
     print(f"  prefill {st.prefill_s*1e3:.1f} ms ({st.prefill_tokens} tok) | "
           f"decode {st.decode_s*1e3:.1f} ms ({st.decode_tokens} tok, "
           f"{st.decode_tok_per_s:.1f} tok/s) | "
@@ -171,6 +213,51 @@ def run_batch(cfg, model, params, args) -> None:
     print(f"  first generated tokens: {out[0, :8].tolist()}")
 
 
+def validate_args(ap, args) -> None:
+    """Fail fast on incompatible flag combinations instead of silently
+    falling back — a typo'd serve invocation should die with a usable
+    message, not measure the wrong configuration."""
+    if args.num_blocks and not args.block_size:
+        ap.error("--num-blocks requires --block-size (paged arena)")
+    if args.paged_attn and not args.block_size:
+        ap.error(f"--paged-attn {args.paged_attn} requires a paged arena "
+                 "(--block-size); the contiguous slot arena has no block "
+                 "tables to attend through")
+    if args.spec == "off":
+        if args.spec_k is not None:
+            ap.error("--spec-k requires --spec {ngram,draft}")
+        if args.spec_draft_model:
+            ap.error("--spec-draft-model requires --spec draft")
+    if args.spec == "draft":
+        if not args.spec_draft_model:
+            ap.error("--spec draft requires --spec-draft-model (e.g. "
+                     "qwen3-0.6b); use --spec ngram for model-free "
+                     "drafting")
+        dfam = get_config(args.spec_draft_model).family
+        if dfam in ("ssm", "hybrid", "encdec", "vlm"):
+            ap.error(f"--spec-draft-model {args.spec_draft_model} "
+                     f"({dfam!r} family) cannot draft: recurrent state "
+                     "cannot roll back, and encoder/vision conditioning "
+                     "cannot be supplied to a draft pass — use a "
+                     "decoder-only draft model")
+    if args.spec == "ngram" and args.spec_draft_model:
+        ap.error("--spec-draft-model is only used by --spec draft")
+    if args.spec != "off":
+        if args.mode != "stream":
+            ap.error("--spec requires --mode stream (the lockstep batch "
+                     "path has no proposer/verifier)")
+        fam = get_config(args.arch).family
+        if fam in ("ssm", "hybrid"):
+            ap.error(f"--spec is unsupported for the {fam!r} family "
+                     f"({args.arch}): rejected tokens advance the "
+                     "recurrent state, which cannot be rolled back")
+        if args.spec_k is not None and args.spec_k < 1:
+            ap.error(f"--spec-k must be >= 1, got {args.spec_k}")
+        if args.chunk_size < 2:
+            ap.error("--spec needs --chunk-size >= 2 (one committed-token "
+                     "lane plus at least one proposal lane)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -195,12 +282,26 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged arena physical blocks "
                          "(0 = slots * ceil(max_seq/block_size))")
-    ap.add_argument("--paged-attn", default="fused",
+    ap.add_argument("--paged-attn", default=None,
                     choices=["fused", "ref"],
                     help="paged decode attention: fused block-table "
                          "Pallas kernel (default, O(live-token) KV "
                          "traffic) or the dense-gather oracle "
-                         "(O(arena) traffic, differential reference)")
+                         "(O(arena) traffic, differential reference); "
+                         "requires a paged arena (--block-size)")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding: model-free prompt-lookup "
+                         "n-gram proposer, or a small draft model "
+                         "(--spec-draft-model), verified through the "
+                         "unified chunked step")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="max proposal depth per slot per step (default "
+                         "4, adaptively shrunk on low accept rates and "
+                         "under token-budget pressure); requires --spec")
+    ap.add_argument("--spec-draft-model", default=None,
+                    help="draft model arch for --spec draft (e.g. "
+                         "qwen3-0.6b drafting for qwen3-8b)")
     ap.add_argument("--arrival", default="poisson",
                     choices=["poisson", "back2back"])
     ap.add_argument("--rate", type=float, default=8.0,
@@ -215,8 +316,7 @@ def main() -> None:
                     help="ledger models llama.cpp-style host sampling "
                          "(full logit rows drained per step)")
     args = ap.parse_args()
-    if args.num_blocks and not args.block_size:
-        ap.error("--num-blocks requires --block-size (paged arena)")
+    validate_args(ap, args)
 
     cfg = get_config(args.arch)
     if args.reduced:

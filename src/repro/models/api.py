@@ -137,6 +137,33 @@ class ModelAPI:
                 (num_slots, chunk), jnp.bool_)
         return specs
 
+    def spec_step_specs(self, num_slots: int, chunk: int, max_seq: int,
+                        dtype=jnp.bfloat16,
+                        block_size: Optional[int] = None,
+                        num_blocks: Optional[int] = None) -> Dict:
+        """Entry ShapeDtypeStructs for the speculative *verify* step: the
+        unified chunked step doubles as the verifier (same model pass,
+        same traced (num_slots, chunk) shape), with one extra per-slot
+        vector — ``prop_lens``, the number of proposal lanes riding
+        behind each slot's committed token (``tokens[:, 0]`` committed,
+        ``tokens[:, 1:1+k]`` proposals; row j's logits verify the token
+        fed at j + 1). The engine's verification head
+        (``sampling.verify_slots``) consumes the full (slots, chunk, V)
+        logits, so no new model entry point exists — these specs abstract
+        the verify step's entry in the engine's argument order
+        (``prop_lens`` follows ``lengths``) and are kept honest by an
+        eval_shape lowering test in tests/test_speculative.py."""
+        base = self.chunked_step_specs(num_slots, chunk, max_seq, dtype,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks)
+        specs = {}
+        for name, spec in base.items():
+            specs[name] = spec
+            if name == "lengths":
+                specs["prop_lens"] = jax.ShapeDtypeStruct((num_slots,),
+                                                          jnp.int32)
+        return specs
+
     def slot_decode_specs(self, num_slots: int, max_seq: int,
                           dtype=jnp.bfloat16) -> Dict:
         """Entry ShapeDtypeStructs for the serving engine's slot-batched

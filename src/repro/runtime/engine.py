@@ -31,6 +31,22 @@ slots share the pass), not once per slot. ``ModelAPI.prefill`` remains
 only for the lockstep/eval entry points (launch.dryrun, trainer eval,
 test oracles) — the serving runtime never calls it.
 
+Speculative decoding (``spec={"ngram","draft"}``): the unified step
+doubles as the *verifier*. A decoding slot feeds its committed token
+plus up to k proposed tokens (model-free prompt-lookup n-grams, or a
+small draft model with its own arena and ledger account — see
+``runtime/speculative.py``); ``sampling.verify_slots`` reads every fed
+position's logits to compute per-slot accept lengths (exact argmax
+match when greedy, distribution-preserving rejection/leftover sampling
+at temperature > 0) and the one token emitted past the accepted prefix.
+Accepted tokens amortize the step's shared linear-weight stream — the
+paper's dominant transfer term — and the rejected suffix is rolled back
+in place (KV positions zeroed, paged block-table tails trimmed, no
+recompute). Proposal lanes are funded from *leftover* step-token budget
+and shrink with a per-slot accept-rate EMA, so a loaded engine degrades
+to plain decode instead of starving prefill. Recurrent families
+(ssm/hybrid) are refused up front: their state cannot roll back.
+
 Paged mode: admission needs a free slot AND the first *chunk's* block
 reservation (reservation then follows chunk progress); each step reserves
 blocks covering every active slot's next feed; on allocator exhaustion
@@ -53,7 +69,7 @@ import numpy as np
 
 from repro.core import convert
 from repro.models.api import ModelAPI
-from repro.runtime import sampling
+from repro.runtime import sampling, speculative
 from repro.runtime.kvcache import KVArena, PagedKVArena
 from repro.runtime.request import Request, SamplingParams, SeqState, Sequence
 from repro.runtime.scheduler import Scheduler, SchedulerStats
@@ -78,7 +94,28 @@ class GenStats:
     # slot's live blocks (clamped index map — O(live tokens)); the ref
     # gather materializes every slot's full-table-width view (O(arena)).
     paged_kv_read_bytes: float = 0.0
+    steps: int = 0                  # unified steps executed
+    # Speculative decoding: proposal lanes fed / accepted by verification
+    # / rejected KV positions rolled back (zeroed + block-trimmed).
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_rolled_back: int = 0
     transfers: Optional[TransferReport] = None
+    draft_transfers: Optional[TransferReport] = None  # spec="draft" account
+
+    @property
+    def steps_per_token(self) -> float:
+        """Unified steps per generated token — the transfer-amortization
+        ratio: the linear weight stream flows once per step, so accepted
+        speculative tokens push this (and weight-stream bytes/token)
+        below the 1-step-per-token floor of plain decode."""
+        return self.steps / self.decode_tokens if self.decode_tokens else 0.0
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Accepted fraction of proposed speculative tokens."""
+        return self.spec_accepted / self.spec_proposed \
+            if self.spec_proposed else 0.0
 
     @property
     def resident_bytes_per_token(self) -> float:
@@ -140,6 +177,10 @@ class ServingEngine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  paged_attn: str = "fused",
+                 spec: str = "off", spec_k: int = 4,
+                 spec_adaptive: bool = True,
+                 spec_draft_model: Optional[ModelAPI] = None,
+                 spec_draft_params=None,
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
                  cache_dtype=jnp.bfloat16):
@@ -147,6 +188,35 @@ class ServingEngine:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if paged_attn not in ("fused", "ref"):
             raise ValueError(f"unknown paged_attn {paged_attn!r}")
+        if spec not in speculative.SPEC_MODES:
+            raise ValueError(f"unknown spec mode {spec!r} (choose from "
+                             f"{speculative.SPEC_MODES})")
+        if spec != "off":
+            if model.cfg.family in speculative.RECURRENT_FAMILIES:
+                raise ValueError(
+                    f"speculative decoding is unsupported for the "
+                    f"{model.cfg.family!r} family: rejected tokens have "
+                    "advanced the recurrent state, which cannot be rolled "
+                    "back without recomputation")
+            if chunk_size < 2:
+                raise ValueError("speculative decoding needs chunk_size "
+                                 ">= 2 (one committed-token lane plus at "
+                                 "least one proposal lane)")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if spec == "draft":
+            if spec_draft_model is None or spec_draft_params is None:
+                raise ValueError("spec='draft' requires spec_draft_model "
+                                 "and spec_draft_params")
+            if spec_draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {spec_draft_model.cfg.vocab_size} != "
+                    f"target vocab {model.cfg.vocab_size}: proposal ids "
+                    "would not be target token ids")
+            if model.cfg.family == "encdec":
+                raise ValueError("spec='draft' supports decoder-only "
+                                 "families (the draft has no encoder "
+                                 "frames to condition on)")
         self.model = model
         self.params = params
         self.quant = quant
@@ -162,6 +232,17 @@ class ServingEngine:
         self.paged = block_size is not None
         self.paged_attn = paged_attn
         self.cache_dtype = cache_dtype
+        self.spec = spec
+        self.spec_k = min(spec_k, self.chunk_size - 1) if spec != "off" \
+            else 0
+        self._spec_ctrl = speculative.SpecController(
+            k_max=self.spec_k, adaptive=spec_adaptive) \
+            if spec != "off" else None
+        self._proposer = speculative.make_proposer(
+            spec, draft_model=spec_draft_model,
+            draft_params=spec_draft_params, num_slots=num_slots,
+            max_seq=max_seq, chunk=self.chunk_size, quant=quant, impl=impl,
+            cache_dtype=cache_dtype) if spec != "off" else None
         self._block_size, self._num_blocks = block_size, num_blocks
         self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
@@ -175,8 +256,11 @@ class ServingEngine:
             lambda p, f: model.encode_cross(p, f, **kw)) \
             if model.encode_cross is not None else None
 
-        def step(p, tokens, pos0, lengths, active, arena, key, temps,
-                 top_ks, top_ps, *rest):
+        def model_pass(p, tokens, pos0, lengths, arena, rest):
+            """The shared chunked model pass: resolve the trailing
+            *rest* operands (paged block tables, vlm embed overrides)
+            into decode_step kwargs — the one place the step entry
+            contract lives, whichever sampling head sits on top."""
             kw2 = dict(kw)
             rest = list(rest)
             if self.paged:
@@ -185,8 +269,13 @@ class ServingEngine:
             if self._vlm:
                 kw2["embeds"] = rest.pop(0)
                 kw2["embeds_mask"] = rest.pop(0)
-            logits, arena = model.decode_step(p, tokens, pos0, arena,
-                                              lengths=lengths, **kw2)
+            return model.decode_step(p, tokens, pos0, arena,
+                                     lengths=lengths, **kw2)
+
+        def step(p, tokens, pos0, lengths, active, arena, key, temps,
+                 top_ks, top_ps, *rest):
+            logits, arena = model_pass(p, tokens, pos0, lengths, arena,
+                                       rest)
             idx = jnp.maximum(lengths - 1, 0)
             last = jnp.take_along_axis(
                 logits, idx[:, None, None], axis=1)[:, 0]
@@ -195,6 +284,25 @@ class ServingEngine:
             return nxt, arena
         self._step = jax.jit(step,
                              donate_argnums=(5,) if donate_cache else ())
+
+        def spec_step(p, tokens, pos0, lengths, prop_lens, active, arena,
+                      key, temps, top_ks, top_ps, *rest):
+            """The unified chunked step as a *verifier*: same model pass,
+            but the sampling head sees every fed position's logits —
+            ``verify_slots`` computes per-slot accept lengths and the one
+            token emitted past the accepted prefix. Slots with zero
+            proposals (prefill chunks, plain decode) degenerate to the
+            ordinary ``lengths-1`` sampling row."""
+            logits, arena = model_pass(p, tokens, pos0, lengths, arena,
+                                       rest)
+            nxt, acc = sampling.verify_slots(
+                logits, tokens, key, temps, active,
+                prop_lens=prop_lens, lengths=lengths,
+                top_k=top_ks, top_p=top_ps)
+            return nxt, acc, arena
+        self._step_spec = jax.jit(
+            spec_step, donate_argnums=(6,) if donate_cache else ()) \
+            if spec != "off" else None
 
     # ------------------------------------------------------------------
     def _fresh_arena_sched(self) -> None:
@@ -231,6 +339,11 @@ class ServingEngine:
         occupant); enc-dec models additionally run the one-time encoder
         pass and scatter the cross KV into the slot."""
         self.arena.reset_slot(seq.slot)
+        if self._proposer is not None:
+            reset = getattr(self._proposer, "reset_slot", None)
+            if reset is not None:
+                reset(seq.slot)             # draft arena slot turnover
+            self._spec_ctrl.reset(seq.slot)
         if self.paged:
             ledger.charge_cache_growth(
                 "prefill", len(self.arena.slot_blocks(seq.slot))
@@ -273,7 +386,7 @@ class ServingEngine:
                 continue                        # preempted by an earlier turn
             phase = "prefill" if seq.state is SeqState.PREFILL else "decode"
             while True:
-                need = seq.position + seq.next_feed(self.chunk_size)
+                need = seq.position + self._next_feed_bound(seq)
                 fresh = self.arena.ensure(slot, need)
                 if fresh is not None:
                     if fresh:
@@ -284,6 +397,27 @@ class ServingEngine:
                 self._preempt(victim)
                 if victim is seq:
                     break                       # evicted ourselves: skip step
+
+    def _next_feed_bound(self, seq: Sequence) -> int:
+        """Upper bound on the tokens ``seq`` feeds next step — what block
+        reservation must cover. A speculating decode slot may feed its
+        committed token plus up to its current proposal depth; proposal
+        lanes that end up trimmed or unfilled leave blocks reserved one
+        step early (reclaimed by the rollback tail trim or sequence
+        growth, never leaked)."""
+        base = seq.next_feed(self.chunk_size)
+        if self.spec != "off" and seq.state is SeqState.DECODE:
+            return base + self._spec_depth(seq)
+        return base
+
+    def _spec_depth(self, seq: Sequence) -> int:
+        """Proposal lanes this sequence wants: the controller's adaptive
+        depth, capped so speculation never proposes past the sequence's
+        own generation budget (the final token is always sampled by a
+        plain lane — proposals beyond it could never be accepted)."""
+        rem = seq.req.max_new_tokens - seq.tokens_out
+        return max(0, min(self._spec_ctrl.depth(seq.slot),
+                          rem - 1, self.chunk_size - 1))
 
     # ------------------------------------------------------------------
     def _sampling_vectors(self, seqs: Dict[int, Sequence]):
@@ -331,10 +465,36 @@ class ServingEngine:
         read *after* the step's host sync so TTFT/latency include the step
         (and any first-step compile) that produced each token."""
         ns, C = self.num_slots, self.chunk_size
-        feeds = self.sched.plan_feeds(C, self.step_token_budget)
+        spec_on = self.spec != "off"
+        proposals: Dict[int, np.ndarray] = {}
+        if spec_on:
+            desires = {slot: d for slot, seq in self.sched.active.items()
+                       if seq.state is SeqState.DECODE
+                       and (d := self._spec_depth(seq)) > 0}
+            feeds = self.sched.plan_feeds(C, self.step_token_budget,
+                                          desires)
+            # Propose only the budget-granted lanes (the draft proposer
+            # pays real steps per lane; the n-gram proposer may return
+            # fewer than granted — or nothing — when no suffix matches).
+            grants = {s: feeds[s] - 1 for s in desires if feeds[s] > 1}
+            if grants:
+                proposals = self._proposer.propose(self.sched.active,
+                                                   grants)
+                for slot, g in grants.items():
+                    got = proposals.get(slot)
+                    unfilled = g - (0 if got is None else int(got.size))
+                    if unfilled > 0:
+                        # Lanes the proposer could not fill are zero-value
+                        # evidence: decay the depth EMA so a slot with no
+                        # matchable suffix stops reserving speculative
+                        # paged blocks it never uses (depth floors at 1).
+                        self._spec_ctrl.update(slot, unfilled, 0)
+        else:
+            feeds = self.sched.plan_feeds(C, self.step_token_budget)
         tokens = np.zeros((ns, C), np.int32)
         pos0 = np.zeros((ns,), np.int32)
         lens = np.zeros((ns,), np.int32)
+        prop_lens = np.zeros((ns,), np.int32)
         active = np.zeros((ns,), bool)
         for slot, seq in self.sched.active.items():
             n = feeds[slot]
@@ -342,6 +502,13 @@ class ServingEngine:
                 tokens[slot, :n] = seq.req.tokens[seq.fed:seq.fed + n]
             else:
                 tokens[slot, 0] = seq.next_token
+                props = proposals.get(slot)
+                if props is not None and props.size:
+                    kp = min(int(props.size), n - 1)
+                    tokens[slot, 1:1 + kp] = props[:kp]
+                    prop_lens[slot] = kp
+                n = 1 + int(prop_lens[slot])  # actual feed may undershoot
+                feeds[slot] = n               # the plan (lanes unfilled)
             pos0[slot] = seq.position
             lens[slot] = n
             active[slot] = True
@@ -353,6 +520,8 @@ class ServingEngine:
                      jnp.asarray(lens), jnp.asarray(active),
                      self.arena.buffers, key, jnp.asarray(temps),
                      jnp.asarray(top_ks), jnp.asarray(top_ps)]
+        if spec_on:
+            step_args.insert(4, jnp.asarray(prop_lens))
         if self.paged:
             dev_tables, uploaded = self.arena.device_tables()
             step_args.append(dev_tables)
@@ -364,7 +533,16 @@ class ServingEngine:
                           jnp.asarray(emask)]
             if vis_bytes:
                 ledger.charge("prefill", "acts", "h2d", vis_bytes)
-        nxt, self.arena.buffers = self._step(*step_args)
+        if spec_on:
+            # The verify step IS the chunked step with the verification
+            # sampling head; spec engines run it exclusively (zero
+            # proposals degenerate to plain sampling), so the jit cache
+            # still holds exactly one step compilation.
+            nxt, acc, self.arena.buffers = self._step_spec(*step_args)
+            acc_host = np.asarray(acc)
+        else:
+            nxt, self.arena.buffers = self._step(*step_args)
+            acc_host = None
         nxt_host = np.asarray(nxt)            # blocks until step completes
         t_end = time.perf_counter()
         now = t_end - t0
@@ -421,18 +599,48 @@ class ServingEngine:
                     seq.record_token(int(nxt_host[slot]), now)
                     stats.decode_tokens += 1
             else:
-                ledger.charge_chunk("decode", 1, int(pos0[slot]) + 1)
+                m = n                         # 1 committed + kp proposals
+                kp = int(prop_lens[slot])
+                ledger.charge_chunk("decode", m, int(pos0[slot]) + m)
+                if kp == 0:
+                    emitted = [int(nxt_host[slot])]
+                else:
+                    a = min(int(acc_host[slot]), kp)
+                    emitted = [int(t) for t in tokens[slot, 1:1 + a]]
+                    emitted.append(int(nxt_host[slot]))
+                    stats.spec_proposed += kp
+                    stats.spec_accepted += a
+                    self._spec_ctrl.update(slot, kp, a)
+                r = 0
+                for t in emitted:
+                    if seq.done:
+                        break                 # generation budget exhausted
+                    seq.record_token(t, now)
+                    r += 1
                 if tok_bytes:
-                    ledger.charge_cache_growth("decode", tok_bytes)
-                ledger.charge_sampled()
-                seq.record_token(int(nxt_host[slot]), now)
-                stats.decode_tokens += 1
+                    ledger.charge_cache_growth("decode", r * tok_bytes)
+                # Host sampling would drain every fed lane's logit row
+                # (rejected lanes included) — charge the full feed width.
+                ledger.charge_sampled(r, logit_rows=m)
+                stats.decode_tokens += r
+                if m > r:
+                    # Rejected-suffix rollback: zero KV positions
+                    # [pos0 + r, pos0 + m) and (paged) trim the block
+                    # table past the surviving prefix.
+                    self.arena.rollback(slot, int(pos0[slot]) + r, m - r,
+                                        C)
+                    stats.spec_rolled_back += m - r
+        stats.steps += 1
         self.sched.record_step()
         self.sched.retire(self.arena.free)
 
     def _jit_cache_size(self) -> int:
-        size = getattr(self._step, "_cache_size", None)
-        return size() if callable(size) else 0
+        total = 0
+        for fn in (self._step, self._step_spec if self.spec != "off"
+                   else None):
+            size = getattr(fn, "_cache_size", None)
+            total += size() if callable(size) else 0
+        return total
 
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request], *, seed: int = 0,
@@ -454,6 +662,10 @@ class ServingEngine:
                         f"could never finish even running alone")
         for r in requests:
             self.sched.submit(r)
+        if self._proposer is not None:
+            reset_run = getattr(self._proposer, "reset_run", None)
+            if reset_run is not None:
+                reset_run()         # fresh draft ledger per serve run
         stats = GenStats()
         ledger = TransferLedger(self.model.cfg, self.quant,
                                 **self._ledger_kw)
@@ -491,6 +703,9 @@ class ServingEngine:
         stats.tokens_in = sum(r.prompt_len for r in requests)
         stats.tokens_out = sum(s.tokens_out for s in self.sched.finished)
         stats.transfers = TransferReport.from_ledger(ledger)
+        draft_ledger = getattr(self._proposer, "ledger", None)
+        if draft_ledger is not None:
+            stats.draft_transfers = TransferReport.from_ledger(draft_ledger)
         order = {r.rid: i for i, r in enumerate(requests)}
         seqs = sorted(self.sched.finished, key=lambda s: order[s.rid])
         return ServeReport(stats=stats, sequences=seqs,

@@ -260,6 +260,25 @@ class KVArena:
         pin a full max_seq stripe from admission to completion."""
         return self.used_slots * self.slot_bytes()
 
+    # -- speculative rollback -------------------------------------------
+    def rollback(self, slot: int, start: int, count: int,
+                 width: int) -> None:
+        """Erase cache positions ``[start, start + count)`` of ``slot``'s
+        seq-indexed leaves — the KV a verification step inserted for
+        *rejected* proposal tokens. Zeroing (rather than only rewinding
+        the position) restores the arena bit-identical to never having
+        inserted them: future reads are already kv_len-masked, but the
+        rollback contract is checked differentially, not argued.
+        ``width`` is the static window (the engine's chunk size), so one
+        compilation covers every (slot, start, count)."""
+        if count <= 0:
+            return
+        leaves, treedef = jax.tree.flatten(self.buffers)
+        seq_flags = tuple(not c for c in self._const_flags)
+        new = _zero_span(leaves, jnp.int32(slot), jnp.int32(start),
+                         jnp.int32(count), width, seq_flags)
+        self.buffers = jax.tree.unflatten(treedef, new)
+
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _arena_insert(arena, prefill_cache, slot):
@@ -286,6 +305,48 @@ def _zero_const_leaves(leaves, slot, const_flags):
         zero = jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)
         start = (0, slot) + (0,) * (a.ndim - 2)
         out.append(jax.lax.dynamic_update_slice(a, zero, start))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5), donate_argnums=(0,))
+def _zero_span(leaves, slot, start, count, width, seq_flags):
+    """Zero cache positions [start, start + count) of one slot across the
+    seq-indexed leaves (L, B, S, ...). ``width`` is static (>= count) so
+    every rollback shares one compilation; the window start is clamped to
+    the leaf and the in-window mask re-aligned, so a span ending at S is
+    handled without out-of-range slicing."""
+    out = []
+    for a, is_seq in zip(leaves, seq_flags):
+        if not is_seq:
+            out.append(a)
+            continue
+        s = a.shape[2]
+        w = min(width, s)
+        sc = jnp.clip(start, 0, s - w)          # clamped window start
+        rel = start - sc                        # span offset inside window
+        begin = (jnp.int32(0), slot, sc) + (jnp.int32(0),) * (a.ndim - 3)
+        win = jax.lax.dynamic_slice(
+            a, begin, (a.shape[0], 1, w) + a.shape[3:])
+        mask = (jnp.arange(w) >= rel) & (jnp.arange(w) < rel + count)
+        mask = mask.reshape((1, 1, w) + (1,) * (a.ndim - 3))
+        win = jnp.where(mask, jnp.zeros((), a.dtype), win)
+        out.append(jax.lax.dynamic_update_slice(a, win, begin))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _zero_paged_positions(leaves, phys, offs, paged_flags):
+    """Zero (physical page, in-page offset) pairs across the paged leaves
+    (L, NB, bs, ...). Callers pad the pair list to a fixed width with
+    null-block entries — the null page's contents are garbage by the
+    layout contract, so zeroing it is free and keeps one compilation per
+    pad width."""
+    out = []
+    for a, is_paged in zip(leaves, paged_flags):
+        if not is_paged:
+            out.append(a)
+            continue
+        out.append(a.at[:, phys, offs].set(jnp.zeros((), a.dtype)))
     return out
 
 
@@ -543,6 +604,42 @@ class PagedKVArena:
         const_slot = self.const_bytes() / max(self.num_slots, 1)
         return self.allocator.used_blocks * self.block_bytes() \
             + self.used_slots * const_slot
+
+    # -- speculative rollback -------------------------------------------
+    def rollback(self, slot: int, start: int, count: int,
+                 width: int) -> int:
+        """Erase cache positions ``[start, start + count)`` of ``slot``
+        after a verification step rejected them: zero the page contents
+        those positions map to through the (pre-trim) block table, then
+        trim the table tail — blocks wholly past the surviving prefix go
+        back to the allocator and their table entries reset to the null
+        sentinel, so resident-bytes accounting tracks the *accepted*
+        sequence length, not the speculated one. Returns the number of
+        blocks freed. ``width`` is the static pad width (the engine's
+        chunk size); unused pair lanes are routed to the null page, whose
+        contents are garbage by contract."""
+        if count <= 0 or not self.has_paged:
+            return 0
+        bs = self.block_size
+        pos = np.arange(start, start + count)
+        phys = np.full((width,), self.null_block, np.int32)
+        offs = np.zeros((width,), np.int32)
+        phys[:count] = self.tables[slot, pos // bs]
+        offs[:count] = pos % bs
+        leaves, treedef = jax.tree.flatten(self.buffers)
+        new = _zero_paged_positions(leaves, jnp.asarray(phys),
+                                    jnp.asarray(offs), self._paged_flags)
+        self.buffers = jax.tree.unflatten(treedef, new)
+        keep = self.blocks_needed(start) if start else 0
+        owned = self._slot_blocks[slot]
+        if len(owned) <= keep:
+            return 0
+        tail = owned[keep:]
+        self.allocator.free(tail)
+        del owned[keep:]
+        self.tables[slot, keep:] = self.null_block
+        self._dev_tables = None
+        return len(tail)
 
 
 def cache_nbytes(cache) -> int:

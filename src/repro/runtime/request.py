@@ -84,6 +84,16 @@ class Sequence:
     def rid(self) -> int:
         return self.req.rid
 
+    def context_tokens(self) -> np.ndarray:
+        """The committed context: prompt followed by every recorded
+        token. While decoding, the last entry is ``next_token`` (the
+        token the next step feeds) — speculative proposers continue from
+        exactly what the target model will see."""
+        if not self.generated:
+            return np.asarray(self.req.tokens, np.int64)
+        return np.concatenate([np.asarray(self.req.tokens, np.int64),
+                               np.asarray(self.generated, np.int64)])
+
     @property
     def done(self) -> bool:
         return self.state is SeqState.DONE

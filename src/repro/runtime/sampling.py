@@ -9,6 +9,20 @@
                    trace-time constants) means one compiled step serves a
                    mixed-request stream — the engine's jit cache no longer
                    fragments per sampling config.
+``verify_slots`` — the speculative-decoding verification head: given the
+                   full (B, C, V) chunk logits of a step that fed each
+                   slot's last committed token plus up to C-1 *proposed*
+                   tokens, compute per-slot accept lengths and the one
+                   token the target model emits past the accepted prefix.
+                   Greedy slots accept by exact argmax match; stochastic
+                   slots run rejection/leftover sampling against a
+                   point-mass draft distribution (our proposers are
+                   deterministic), which provably preserves the target
+                   per-token distribution: accept x̂ w.p. q(x̂), else sample
+                   from q restricted to tokens != x̂ renormalized — the
+                   emitted-token law is exactly q. A slot with zero
+                   proposals degenerates to sampling its row ``lengths-1``,
+                   so prefill chunks and plain decode share the head.
 """
 from __future__ import annotations
 
@@ -89,3 +103,66 @@ def sample_slots(logits: jnp.ndarray, key, temperature: jnp.ndarray,
     stochastic = jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
     tok = jnp.where(temperature > 0.0, stochastic, greedy)
     return jnp.where(active, tok, 0)
+
+
+def verify_slots(logits: jnp.ndarray, tokens: jnp.ndarray, key,
+                 temperature: jnp.ndarray, active: jnp.ndarray, *,
+                 prop_lens: jnp.ndarray, lengths: jnp.ndarray,
+                 top_k=0, top_p=1.0):
+    """Speculative verification over a unified chunked step's logits.
+
+    logits: (B, C, V) — row j is the target distribution for the token
+    *after* fed token j; tokens: (B, C) the fed ids, laid out per slot as
+    ``[last_committed, p_1, ..., p_k]`` so the proposal verified against
+    row j is ``tokens[:, j + 1]``; prop_lens: (B,) proposal counts (k; 0
+    for prefill chunks and plain decode); lengths: (B,) fed counts
+    (``1 + k`` for a speculating slot). temperature/top_k/top_p: per-slot
+    sampling config, identical semantics to ``sample_slots``.
+
+    Returns ``(next_token (B,), accept_len (B,))``. ``accept_len`` is the
+    longest accepted proposal prefix; ``next_token`` is sampled from the
+    row *after* that prefix — the leftover (q with the rejected proposal
+    zeroed, renormalized) on rejection, the plain target distribution on
+    the bonus row after a full accept. Greedy slots accept on raw-argmax
+    match, so their emitted chain is token-for-token the non-speculative
+    greedy chain. Proposals are point-mass (deterministic drafters):
+    accept w.p. min(1, q(x̂)/p(x̂)) = q(x̂).
+    """
+    b, c, v = logits.shape
+    lf32 = logits.astype(jnp.float32)
+    # Raw-argmax per row: the same greedy rule as sample_slots, so a
+    # greedy speculative serve reproduces the non-speculative chain.
+    greedy_rows = jnp.argmax(lf32, axis=-1).astype(jnp.int32)      # (B, C)
+    t = jnp.maximum(temperature, 1e-6)
+    top_k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    top_p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    flat = (lf32 / t[:, None, None]).reshape(b * c, v)
+    lf = _filter_top_k_top_p_slots(flat, jnp.repeat(top_k, c),
+                                   jnp.repeat(top_p, c)).reshape(b, c, v)
+    probs = jax.nn.softmax(lf, axis=-1)
+    # Proposal aligned with row j is the token fed at j + 1.
+    prop = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    q_prop = jnp.take_along_axis(probs, prop[..., None], -1)[..., 0]
+    key_u, key_s = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, c))
+    accept = jnp.where((temperature > 0.0)[:, None],
+                       u < q_prop, greedy_rows == prop)
+    valid = jnp.arange(c)[None, :] < prop_lens[:, None]
+    accept_len = jnp.sum(
+        jnp.cumprod((accept & valid).astype(jnp.int32), axis=1), axis=1)
+    # The row the emitted token samples from: lengths-1 with no proposals
+    # (prefill / plain decode), accept_len for a speculating slot (the
+    # correction row on rejection, the bonus row on full accept).
+    row = jnp.clip(lengths - 1 - (prop_lens - accept_len), 0, c - 1)
+    lf_r = jnp.take_along_axis(lf, row[:, None, None], axis=1)[:, 0]
+    greedy_r = jnp.take_along_axis(greedy_rows, row[:, None], axis=1)[:, 0]
+    prop_r = jnp.take_along_axis(prop, row[:, None], axis=1)[:, 0]
+    rejected = accept_len < prop_lens
+    # Leftover distribution for a point-mass draft: q without x̂,
+    # renormalized (categorical renormalizes implicitly).
+    drop = rejected[:, None] & (jnp.arange(v)[None, :] == prop_r[:, None])
+    stoch = jax.random.categorical(
+        key_s, jnp.where(drop, -1e30, lf_r), axis=-1).astype(jnp.int32)
+    nxt = jnp.where(temperature > 0.0, stoch, greedy_r)
+    return jnp.where(active, nxt, 0), jnp.where(active, accept_len, 0)

@@ -51,6 +51,8 @@ class SchedulerStats:
     steps: int = 0
     prefill_chunks: int = 0         # chunked mode: prompt chunks scheduled
     deferred_feeds: int = 0         # chunked mode: slots starved by budget
+    spec_lanes_planned: int = 0     # speculative proposal lanes funded
+    spec_lanes_trimmed: int = 0     # proposal lanes cut by budget pressure
 
     @property
     def mean_occupancy(self) -> float:
@@ -111,15 +113,23 @@ class Scheduler:
         return admitted
 
     # -- chunk scheduling (token-budget division, chunked mode) -----------
-    def plan_feeds(self, chunk: int,
-                   budget: Optional[int] = None) -> Dict[int, int]:
+    def plan_feeds(self, chunk: int, budget: Optional[int] = None,
+                   spec_extras: Optional[Dict[int, int]] = None
+                   ) -> Dict[int, int]:
         """{slot: tokens to feed this step}. Decoding slots are funded
         first (1 token each — stalling an in-flight decode only delays its
         own completion); the remaining budget goes to prefilling slots
         oldest-first, up to ``chunk`` tokens each. ``budget`` defaults to
         ``num_slots * chunk`` (the traced step shape), so the cap only
         bites when the engine sets a tighter ``step_token_budget``. A
-        starved prefill slot feeds 0 tokens and resumes next step."""
+        starved prefill slot feeds 0 tokens and resumes next step.
+
+        ``spec_extras``: {decode slot: desired speculative proposal
+        lanes}. Speculation is funded *last*, oldest-first, from whatever
+        budget survives decode + prefill — so under token-budget pressure
+        the engine sheds proposal depth (down to plain 1-token decode)
+        before it stalls a prompt chunk or an in-flight decode. Trimmed
+        lanes are counted in ``stats.spec_lanes_trimmed``."""
         if budget is None:
             budget = self.num_slots * chunk
         feeds: Dict[int, int] = {}
@@ -141,6 +151,16 @@ class Scheduler:
                 self.stats.prefill_chunks += 1
             else:
                 self.stats.deferred_feeds += 1
+        if spec_extras:
+            by_age = sorted((s for s in spec_extras if s in feeds),
+                            key=lambda s: self.active[s].admit_seq)
+            for slot in by_age:
+                want = min(spec_extras[slot], chunk - feeds[slot])
+                grant = min(want, max(budget, 0))
+                feeds[slot] += grant
+                budget -= grant
+                self.stats.spec_lanes_planned += grant
+                self.stats.spec_lanes_trimmed += want - grant
         return feeds
 
     # -- step bookkeeping -------------------------------------------------

@@ -8,8 +8,17 @@ of a generation to a (phase, category, direction) cell:
 
   phase      prefill | decode            (paper Fig. 15a vs 15b)
   category   tokens  — prompt/feedback token ids, h2d
-             weights — offloaded kernel weight staging (DMA LOAD); for the
-                       fp16 attention calls this *is* the KV cache stream
+             weights — offloaded kernel weight staging (DMA LOAD). Under
+                       the live chunked charging this is the *linear*
+                       weight stream only (once per step, shared by every
+                       slot) — the lever speculative verification
+                       amortizes; the analytic single-stream replay keeps
+                       the legacy combined meaning (linear + KV)
+             kv_stream — the fp16 attention calls' per-slot KV cache
+                       stream (attn_qk / attn_pv "weights"), split out so
+                       bytes/token decomposes into the shareable weight
+                       stream vs the per-token KV traffic (live chunked
+                       charging only)
              acts    — activation staging for offloaded kernels, h2d
              outs    — kernel result drain, d2h
              sampled — sampled token ids, d2h (fused device sampling), or
@@ -163,17 +172,24 @@ class TransferLedger:
         single-stream replay."""
         self.charge(phase, "tokens", H2D, new_tokens * 4)
         _, w_kv, a, o = self._split_kernel_bytes(kv_len, new_tokens)
-        self.charge(phase, "weights", H2D, w_kv)
+        self.charge(phase, "kv_stream", H2D, w_kv)
         self.charge(phase, "acts", H2D, a)
         self.charge(phase, "outs", D2H, o)
         if phase == "prefill":
             self.tokens["prefill"] += new_tokens
 
-    def charge_sampled(self, n: int = 1) -> None:
-        """``n`` sampled tokens leaving the device (or full logit rows
-        under host sampling). Each sampled token is one generated token."""
+    def charge_sampled(self, n: int = 1,
+                       logit_rows: Optional[int] = None) -> None:
+        """``n`` generated tokens committed (the per-token denominator).
+        d2h side: the fused device sampler drains ``n`` token ids; host
+        sampling drains full logit rows — ``logit_rows`` of them
+        (defaults to ``n``; a speculative verify step must drain *every
+        fed lane's* row, accepted or rejected, so the engine passes the
+        full feed width there)."""
         if self.host_sampling:
-            self.charge("decode", "logits", D2H, n * self.cfg.vocab_size * 4)
+            rows = n if logit_rows is None else logit_rows
+            self.charge("decode", "logits", D2H,
+                        rows * self.cfg.vocab_size * 4)
         else:
             self.charge("decode", "sampled", D2H, n * 4)
         self.tokens["decode"] += n
@@ -194,6 +210,29 @@ class TransferLedger:
 
     def total(self, direction: str) -> float:
         return sum(self.phase_bytes(p)[direction] for p in self._cells)
+
+    def category_bytes(self, category: str) -> float:
+        """Bytes charged to one category across phases and directions."""
+        return sum(b for cats in self._cells.values()
+                   for cat, by_dir in cats.items() if cat == category
+                   for b in by_dir.values())
+
+    def weight_stream_bytes(self) -> float:
+        """The quantized linear-weight DMA stream (the dominant,
+        step-amortizable term under the chunked charging — what
+        speculative verification divides by the accept length)."""
+        return self.category_bytes("weights")
+
+    def kv_stream_bytes(self) -> float:
+        """Per-slot KV cache stream of the fp16 attention calls (grows
+        with live context; not amortizable across slots or steps)."""
+        return self.category_bytes("kv_stream")
+
+    def weight_stream_bytes_per_token(self) -> float:
+        """Weight-stream bytes per *generated* token — proportional to
+        steps-per-token, hence the speculative-decoding acceptance
+        metric: k accepted tokens per verify step divide one stream."""
+        return self.weight_stream_bytes() / max(self.tokens["decode"], 1)
 
     def bytes_per_token(self) -> float:
         """Transferred bytes (both directions) per generated token."""
@@ -264,10 +303,17 @@ class TransferReport:
     breakdown: Dict[str, Dict[str, Dict[str, float]]]
     phase_totals: Dict[str, Dict[str, float]]
     bytes_per_token: float
+    weight_stream_bytes: float = 0.0
+    kv_stream_bytes: float = 0.0
+    weight_stream_bytes_per_token: float = 0.0
 
     @classmethod
     def from_ledger(cls, ledger: TransferLedger) -> "TransferReport":
         return cls(breakdown=ledger.breakdown(),
                    phase_totals={p: ledger.phase_bytes(p)
                                  for p in ledger.breakdown()},
-                   bytes_per_token=ledger.bytes_per_token())
+                   bytes_per_token=ledger.bytes_per_token(),
+                   weight_stream_bytes=ledger.weight_stream_bytes(),
+                   kv_stream_bytes=ledger.kv_stream_bytes(),
+                   weight_stream_bytes_per_token=(
+                       ledger.weight_stream_bytes_per_token()))

@@ -1,0 +1,563 @@
+"""Speculative-decoding subsystem tests.
+
+Covers the ISSUE 5 contracts: the verification head preserves the target
+distribution (greedy: exact argmax chain; stochastic: rejection/leftover
+sampling vs a point-mass draft — frequency-compared against plain
+``sample_slots``), greedy speculative serving is token-for-token
+identical to non-speculative across attention families and arena kinds,
+KV rollback leaves the arena bit-identical to never having inserted the
+rejected tokens (contiguous leaves; paged pages + block tables +
+allocator state), recurrent families are refused, the draft-model
+proposer reproduces the target chain (self-draft accepts everything),
+the scheduler funds speculative lanes last, and serve.py fails fast on
+incompatible flag combinations."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, ASSIGNED
+from repro.models.api import build_model
+from repro.runtime import sampling
+from repro.runtime.engine import ServingEngine
+from repro.runtime.kvcache import KVArena, PagedKVArena
+from repro.runtime.request import Request, SamplingParams
+from repro.runtime.scheduler import Scheduler
+from repro.runtime.speculative import (DraftModelProposer, NGramProposer,
+                                       SpecController)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def repetitive_requests(cfg, n=3, gen=20, plen=8, seed=11, temp=0.0):
+    """Tiled-pattern prompts + long greedy gens: the reduced model's
+    decode settles into repeating cycles, so prompt-lookup actually
+    proposes (and gets accepted) instead of idling."""
+    rng = np.random.RandomState(seed)
+    sp = SamplingParams(temperature=temp)
+    reqs = []
+    for i in range(n):
+        pat = rng.randint(0, cfg.vocab_size, 4)
+        reqs.append(Request(rid=i, tokens=np.tile(pat, plen // 4 + 1)[:plen],
+                            max_new_tokens=gen, sampling=sp))
+    return reqs
+
+
+# ----------------------------------------------------------------------
+# n-gram proposer
+# ----------------------------------------------------------------------
+def test_ngram_proposes_repeated_continuation():
+    p = NGramProposer(max_n=3, min_n=1)
+    #          0  1  2  3  4  5  6  7
+    ctx = np.array([5, 6, 7, 9, 5, 6, 7, 9])
+    # suffix trigram [6,7,9] matched at positions 1..3 -> continue with 5,6
+    np.testing.assert_array_equal(p._propose_one(ctx, 2), [5, 6])
+    # k caps the continuation length
+    assert p._propose_one(ctx, 1).tolist() == [5]
+    # proposals are clipped at the end of the known continuation
+    assert len(p._propose_one(ctx, 10)) == 4        # ctx[4:8]
+
+
+def test_ngram_most_recent_match_and_no_match():
+    p = NGramProposer(max_n=2, min_n=1)
+    # suffix [3] occurs at 0 and 2: the *most recent* (2) wins -> next is 9
+    assert p._propose_one(np.array([3, 8, 3, 9, 3]), 1).tolist() == [9]
+    # nothing repeats: no proposal
+    assert p._propose_one(np.array([1, 2, 3, 4]), 4).size == 0
+    # context shorter than min_n + 1: no proposal
+    assert NGramProposer(min_n=2, max_n=3)._propose_one(
+        np.array([1, 2]), 2).size == 0
+
+
+def test_spec_controller_adapts_depth():
+    c = SpecController(k_max=4)
+    slot = 0
+    assert c.depth(slot) == 4                       # optimistic start
+    for _ in range(6):
+        c.update(slot, 4, 0)                        # nothing accepted
+    assert c.depth(slot) == 1                       # shrinks to shallow
+    for _ in range(8):
+        c.update(slot, c.depth(slot), c.depth(slot))
+    assert c.depth(slot) >= 3                       # climbs back
+    c.reset(slot)
+    assert c.depth(slot) == 4                       # slot reuse restarts
+    assert SpecController(k_max=4, adaptive=False).depth(9) == 4
+
+
+# ----------------------------------------------------------------------
+# scheduler: speculative lanes funded last
+# ----------------------------------------------------------------------
+def test_plan_feeds_funds_speculation_from_leftover_budget():
+    sched = Scheduler(num_slots=3, max_seq=64)
+    for i, arr in enumerate([0.0, 0.0, 0.0]):
+        sched.submit(Request(rid=i, tokens=np.arange(8) + 2,
+                             max_new_tokens=4, arrival_s=arr))
+    free = [2, 1, 0]
+    sched.admit(lambda seq: free.pop() if free else None, now=0.0)
+    # flip slots 0/1 to decode; slot 2 still prefilling
+    for slot in (0, 1):
+        seq = sched.active[slot]
+        seq.feed_chunk(8)
+        seq.start_decode()
+        seq.record_token(1, 0.0)
+    # budget 6: decode 2x1 -> prefill chunk 3 -> 1 lane left for spec
+    feeds = sched.plan_feeds(chunk=3, budget=6,
+                             spec_extras={0: 2, 1: 2})
+    assert feeds[2] == 3                            # prefill fully funded
+    assert feeds[0] + feeds[1] == 3                 # 2 base + 1 spec lane
+    assert sched.stats.spec_lanes_planned == 1
+    assert sched.stats.spec_lanes_trimmed == 3
+    # ample budget: both decode slots get their full depth
+    feeds = sched.plan_feeds(chunk=4, spec_extras={0: 2, 1: 2})
+    assert feeds[0] == feeds[1] == 3
+
+
+# ----------------------------------------------------------------------
+# verification head
+# ----------------------------------------------------------------------
+def test_verify_slots_greedy_accept_and_correction(rng):
+    b, c, v = 3, 4, 16
+    key = jax.random.PRNGKey(3)
+    logits = np.full((b, c, v), -5.0, np.float32)
+    argmaxes = np.array([[3, 5, 7, 9], [3, 5, 7, 9], [2, 4, 6, 8]])
+    for i in range(b):
+        for j in range(c):
+            logits[i, j, argmaxes[i, j]] = 5.0
+    tokens = np.zeros((b, c), np.int32)
+    tokens[0, 1:] = [3, 5, 7]                       # all 3 proposals match
+    tokens[1, 1:] = [3, 9, 7]                       # second proposal wrong
+    tokens[2, 1:] = [1, 1, 1]                       # prop_len 0 (plain row)
+    nxt, acc = sampling.verify_slots(
+        jnp.asarray(logits), jnp.asarray(tokens), key,
+        jnp.zeros((b,)), jnp.array([True, True, True]),
+        prop_lens=jnp.array([3, 3, 0]), lengths=jnp.array([4, 4, 2]))
+    assert acc.tolist() == [3, 1, 0]
+    assert int(nxt[0]) == 9           # bonus row after full accept
+    assert int(nxt[1]) == 5           # correction: argmax of row accept_len
+    assert int(nxt[2]) == 4           # plain sampling at lengths-1
+    # inactive slots emit 0 and accept nothing
+    nxt, acc = sampling.verify_slots(
+        jnp.asarray(logits), jnp.asarray(tokens), key,
+        jnp.zeros((b,)), jnp.array([False] * 3),
+        prop_lens=jnp.array([3, 3, 0]), lengths=jnp.array([4, 4, 2]))
+    assert nxt.tolist() == [0, 0, 0] and acc.tolist() == [0, 0, 0]
+
+
+def _spec_emission_frequencies(row, proposal, temp, top_k, top_p, n,
+                               seed=0):
+    """Empirical law of the first emitted token under verification:
+    replicate one logit row over n slots (independent per-slot RNG in a
+    single call), propose ``proposal`` in every lane."""
+    v = row.shape[-1]
+    logits = jnp.broadcast_to(row, (n, v))[:, None, :]
+    pad = jnp.zeros((n, 1), jnp.int32)
+    tokens = jnp.concatenate(
+        [pad, jnp.full((n, 1), proposal, jnp.int32)], axis=1)
+    logits2 = jnp.concatenate([logits, logits], axis=1)   # (n, 2, v)
+    nxt, acc = sampling.verify_slots(
+        logits2, tokens, jax.random.PRNGKey(seed),
+        jnp.full((n,), temp), jnp.ones((n,), bool),
+        prop_lens=jnp.ones((n,), jnp.int32),
+        lengths=jnp.full((n,), 2, jnp.int32),
+        top_k=top_k, top_p=top_p)
+    # the FIRST emitted token: the proposal when accepted, else the
+    # leftover sample (nxt from the correction row).
+    emitted = jnp.where(acc == 1, proposal, nxt)
+    return np.bincount(np.asarray(emitted), minlength=v) / n
+
+
+def _plain_frequencies(row, temp, top_k, top_p, n, seed=1):
+    v = row.shape[-1]
+    logits = jnp.broadcast_to(row, (n, v))
+    out = sampling.sample_slots(logits, jax.random.PRNGKey(seed),
+                                jnp.full((n,), temp), jnp.ones((n,), bool),
+                                top_k=top_k, top_p=top_p)
+    return np.bincount(np.asarray(out), minlength=v) / n
+
+
+def _check_spec_preserves_distribution(seed, temp, top_k, top_p,
+                                       proposal, n=4000):
+    row = jax.random.normal(jax.random.PRNGKey(seed), (24,)) * 2.0
+    spec = _spec_emission_frequencies(row, proposal, temp, top_k, top_p,
+                                      n, seed=seed + 7)
+    plain = _plain_frequencies(row, temp, top_k, top_p, n, seed=seed + 8)
+    tvd = 0.5 * np.abs(spec - plain).sum()
+    # two empirical 4000-draw frequency vectors over V=24 sit at TVD
+    # ~0.04 even when identical in law; 0.075 is ~2.5 sigma above that.
+    assert tvd < 0.075, (
+        f"speculative first-token law diverged from the target "
+        f"distribution: TVD={tvd:.4f} (temp={temp}, top_k={top_k}, "
+        f"top_p={top_p}, proposal={proposal})")
+
+
+@pytest.mark.parametrize("seed,temp,top_k,top_p,proposal", [
+    (0, 0.8, 0, 1.0, 3),      # plain softmax, likely token proposed
+    (1, 0.8, 0, 1.0, 17),     # unlikely token proposed (mostly rejected)
+    (2, 1.3, 8, 1.0, 5),      # top-k filtered
+    (3, 0.6, 0, 0.8, 2),      # nucleus filtered
+])
+def test_spec_sampling_preserves_distribution(seed, temp, top_k, top_p,
+                                              proposal):
+    _check_spec_preserves_distribution(seed, temp, top_k, top_p, proposal)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), temp=st.floats(0.3, 2.0),
+           top_k=st.sampled_from([0, 4, 12]),
+           top_p=st.sampled_from([1.0, 0.9, 0.7]),
+           proposal=st.integers(0, 23))
+    def test_spec_sampling_preserves_distribution_fuzz(
+            seed, temp, top_k, top_p, proposal):
+        _check_spec_preserves_distribution(seed, temp, top_k, top_p,
+                                           proposal)
+
+
+# ----------------------------------------------------------------------
+# greedy speculative serve == non-speculative serve, token for token
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch,arena", [
+    ("qwen3-0.6b", "contiguous"),
+    ("qwen3-0.6b", "paged-fused"),
+    ("qwen3-0.6b", "paged-ref"),
+    ("deepseek-v3-671b", "contiguous"),
+    ("deepseek-v3-671b", "paged-fused"),
+])
+def test_greedy_spec_matches_nonspec(arch, arena):
+    cfg = ASSIGNED[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mla = arch.startswith("deepseek")
+    gen = 8 if mla else 20                 # interpret-mode MLA is slow
+    kw = {}
+    if arena != "contiguous":
+        kw = dict(block_size=4, paged_attn=arena.split("-")[1])
+    mk = lambda: repetitive_requests(cfg, n=3, gen=gen)
+    off = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=8, **kw).serve(mk(), seed=0,
+                                                  realtime=False)
+    eng = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=8, spec="ngram", spec_k=4, **kw)
+    rep = eng.serve(mk(), seed=0, realtime=False)
+    assert rep.sched.completed == 3
+    for a, b in zip(off.sequences, rep.sequences):
+        assert a.generated == b.generated, \
+            f"{arch}/{arena}: request {a.rid} diverged under speculation"
+    assert rep.step_compiles <= 1          # ONE verify-step compilation
+    assert rep.stats.spec_proposed > 0
+    if not mla:                            # qwen3 streams repeat strongly
+        assert rep.stats.spec_accepted > 0
+        assert rep.stats.steps_per_token < off.stats.steps_per_token
+    if eng.paged:                          # rollback returned every block
+        assert eng.arena.allocator.free_blocks == eng.arena.num_blocks
+
+
+def test_spec_ledger_weight_stream_decomposition(served_model):
+    """The ledger split: weights (shared linear stream) == one charge per
+    unified step; kv_stream + weights + tokens + acts + outs + sampled
+    close against the directional totals; steps_per_token drives the
+    weight-stream amortization exactly."""
+    cfg, model, params = served_model
+    eng = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=8, spec="ngram", spec_k=4)
+    rep = eng.serve(repetitive_requests(cfg, n=3, gen=16), seed=0,
+                    realtime=False)
+    led = rep.ledger
+    st = rep.stats
+    from repro.core.offload import model_kernel_calls
+    w_lin = sum(c.weight_bytes
+                for c in model_kernel_calls(cfg, "fp16", 1, 1, decode=True)
+                if c.name not in ("attn_qk", "attn_pv"))
+    assert led.weight_stream_bytes() == pytest.approx(w_lin * st.steps)
+    assert led.weight_stream_bytes_per_token() == pytest.approx(
+        w_lin * st.steps_per_token)
+    assert led.kv_stream_bytes() > 0
+    for direction in ("h2d", "d2h"):
+        cells = sum(by_dir.get(direction, 0.0)
+                    for cats in led.breakdown().values()
+                    for by_dir in cats.values())
+        assert cells == pytest.approx(led.total(direction))
+    # the report mirrors the ledger views
+    assert rep.transfers.weight_stream_bytes == \
+        pytest.approx(led.weight_stream_bytes())
+    assert rep.transfers.kv_stream_bytes == \
+        pytest.approx(led.kv_stream_bytes())
+
+
+# ----------------------------------------------------------------------
+# KV rollback: bit-identical to never having inserted rejected tokens
+# ----------------------------------------------------------------------
+def _feed(model, params, arena, tokens, pos0, lengths, tables=None):
+    kw = dict(quant="none", impl="ref")
+    if tables is not None:
+        kw["block_tables"] = tables
+        kw["paged_impl"] = "ref"
+    _, arena.buffers = model.decode_step(
+        params, jnp.asarray(tokens), jnp.asarray(pos0), arena.buffers,
+        lengths=jnp.asarray(lengths), **kw)
+
+
+def test_rollback_contiguous_bit_identical(served_model):
+    cfg, model, params = served_model
+    C, prefix, m, r = 8, 5, 6, 2       # feed 6 from pos 5, keep 2
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, cfg.vocab_size, (2, prefix + m))
+    arenas = [KVArena(model, 2, 24) for _ in range(2)]
+    for arena in arenas:               # common committed prefix, both slots
+        t = np.zeros((2, C), np.int32)
+        t[:, :prefix] = toks[:, :prefix]
+        _feed(model, params, arena, t, [0, 0], [prefix, prefix])
+    a, b = arenas
+    t = np.zeros((2, C), np.int32)
+    t[0, :m] = toks[0, prefix:prefix + m]
+    _feed(model, params, a, t, [prefix, 0], [m, 0])         # speculate m
+    a.rollback(0, prefix + r, m - r, C)                     # reject m - r
+    t2 = np.zeros((2, C), np.int32)
+    t2[0, :r] = toks[0, prefix:prefix + r]
+    _feed(model, params, b, t2, [prefix, 0], [r, 0])        # never insert
+    for la, lb in zip(jax.tree.leaves(a.buffers),
+                      jax.tree.leaves(b.buffers)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_rollback_paged_bit_identical_and_trims_blocks(served_model):
+    cfg, model, params = served_model
+    C, bs, prefix, m, r = 8, 2, 3, 6, 1    # keep 1 -> frees tail blocks
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, cfg.vocab_size, (1, prefix + m))
+
+    def setup(cover):
+        arena = PagedKVArena(model, 1, 24, block_size=bs, num_blocks=8)
+        slot = arena.alloc_slot(arena.blocks_needed(prefix))
+        assert slot == 0
+        t = np.zeros((1, C), np.int32)
+        t[0, :prefix] = toks[0, :prefix]
+        tables, _ = arena.device_tables()
+        _feed(model, params, arena, t, [0], [prefix], tables)
+        assert arena.ensure(0, cover) is not None
+        return arena
+
+    a = setup(prefix + m)
+    t = np.zeros((1, C), np.int32)
+    t[0, :m] = toks[0, prefix:prefix + m]
+    tables, _ = a.device_tables()
+    _feed(model, params, a, t, [prefix], [m], tables)
+    freed = a.rollback(0, prefix + r, m - r, C)
+    assert freed > 0                       # the tail trim returned blocks
+
+    b = setup(prefix + r)
+    t2 = np.zeros((1, C), np.int32)
+    t2[0, :r] = toks[0, prefix:prefix + r]
+    tables, _ = b.device_tables()
+    _feed(model, params, b, t2, [prefix], [r], tables)
+
+    np.testing.assert_array_equal(a.tables, b.tables)
+    assert a.slot_blocks(0) == b.slot_blocks(0)
+    assert a.allocator.free_blocks == b.allocator.free_blocks
+    for la, lb, paged in zip(jax.tree.leaves(a.buffers),
+                             jax.tree.leaves(b.buffers), a._paged_flags):
+        la, lb = np.asarray(la), np.asarray(lb)
+        if paged:                          # null page is garbage by contract
+            la, lb = la[:, :a.null_block], lb[:, :b.null_block]
+        np.testing.assert_array_equal(la, lb)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "jamba-v0.1-52b"])
+def test_recurrent_families_refuse_speculation(arch):
+    """SSM state refusal path: a rejected token has advanced the
+    recurrence; there is no rollback without recompute, so construction
+    fails fast instead of corrupting generation."""
+    cfg = ASSIGNED[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent"):
+        ServingEngine(model, params, num_slots=2, max_seq=16,
+                      spec="ngram")
+
+
+def test_spec_engine_validation(served_model):
+    cfg, model, params = served_model
+    with pytest.raises(ValueError, match="spec mode"):
+        ServingEngine(model, params, spec="turbo")
+    with pytest.raises(ValueError, match="chunk_size"):
+        ServingEngine(model, params, spec="ngram", chunk_size=1)
+    with pytest.raises(ValueError, match="spec_draft_model"):
+        ServingEngine(model, params, spec="draft")
+    import dataclasses
+    other_cfg = dataclasses.replace(cfg, name="vocab-mismatch",
+                                    vocab_size=cfg.vocab_size + 256)
+    other = build_model(other_cfg)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(model, params, spec="draft",
+                      spec_draft_model=other,
+                      spec_draft_params=other.init(jax.random.PRNGKey(0)))
+    # an encdec draft would propose from zeroed cross-attention state
+    # (reduced vocabs all match, so the vocab check alone won't catch it)
+    enc = build_model(ASSIGNED["whisper-small"].reduced())
+    with pytest.raises(ValueError, match="conditioning"):
+        ServingEngine(model, params, spec="draft",
+                      spec_draft_model=enc,
+                      spec_draft_params=enc.init(jax.random.PRNGKey(0)))
+
+
+def test_unmatchable_stream_decays_depth(served_model):
+    """A slot whose context never yields an n-gram match must not keep
+    reserving full-depth speculative lanes: unfilled grants count as
+    zero-accept evidence, so the controller decays to the 1-lane floor
+    (and paged block reservation shrinks with it)."""
+    cfg, model, params = served_model
+    rng = np.random.RandomState(2)
+    reqs = [Request(rid=i, tokens=rng.randint(0, cfg.vocab_size, 8),
+                    max_new_tokens=12) for i in range(2)]
+    eng = ServingEngine(model, params, num_slots=2, max_seq=24,
+                        chunk_size=8, spec="ngram", spec_k=4)
+    rep = eng.serve(reqs, seed=0, realtime=False)
+    assert rep.sched.completed == 2
+    # random 512-vocab prompts: matches are rare; whatever happened, the
+    # EMA must have moved off its optimistic start wherever grants went
+    # unfilled, and unmatchable slots must sit at the depth floor.
+    assert eng._spec_ctrl.ema, "controller never saw feedback"
+    assert all(e < 1.0 for e in eng._spec_ctrl.ema.values())
+    if rep.stats.spec_proposed == 0:       # fully unmatchable stream
+        assert all(eng._spec_ctrl.depth(s) == 1
+                   for s in eng._spec_ctrl.ema)
+
+
+def test_spec_step_specs_lower_abstractly(served_model):
+    """The verify-step entry specs are a live contract: the chunked model
+    pass plus the verification head must lower via eval_shape against
+    them (no allocation), with ``prop_lens`` in the engine's argument
+    order (right after ``lengths``)."""
+    cfg, model, params = served_model
+    ns, C = 2, 8
+    specs = model.spec_step_specs(ns, C, 32)
+    assert list(specs)[:4] == ["tokens", "positions", "lengths",
+                               "prop_lens"]
+    aparams = model.abstract_params()
+    key = jax.random.PRNGKey(0)
+    temps = jnp.zeros((ns,), jnp.float32)
+
+    def verify_step(p, s):
+        logits, cache = model.decode_step(p, s["tokens"], s["positions"],
+                                          s["cache"],
+                                          lengths=s["lengths"])
+        nxt, acc = sampling.verify_slots(
+            logits, s["tokens"], key, temps, s["active"],
+            prop_lens=s["prop_lens"], lengths=s["lengths"])
+        return nxt, acc, cache
+    nxt, acc, cache = jax.eval_shape(verify_step, aparams, specs)
+    assert nxt.shape == (ns,) and acc.shape == (ns,)
+    assert jax.tree.structure(cache) == jax.tree.structure(specs["cache"])
+
+
+# ----------------------------------------------------------------------
+# draft-model proposer
+# ----------------------------------------------------------------------
+def test_self_draft_accepts_everything(served_model):
+    """Target drafting for itself: greedy proposals == greedy chain, so
+    every proposal is accepted and the step count collapses — the
+    strongest end-to-end check of draft catch-up, verification, and
+    draft-cache rollback working together."""
+    cfg, model, params = served_model
+    mk = lambda: repetitive_requests(cfg, n=2, gen=16, seed=5)
+    off = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=8).serve(mk(), seed=0, realtime=False)
+    eng = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=8, spec="draft", spec_k=4,
+                        spec_draft_model=model, spec_draft_params=params)
+    rep = eng.serve(mk(), seed=0, realtime=False)
+    assert rep.stats.spec_proposed > 0
+    assert rep.stats.spec_accepted == rep.stats.spec_proposed
+    assert rep.stats.steps_per_token < 0.5 * off.stats.steps_per_token
+    for a, b in zip(off.sequences, rep.sequences):
+        assert a.generated == b.generated
+    assert rep.stats.draft_transfers is not None
+    assert rep.stats.draft_transfers.weight_stream_bytes > 0
+
+
+def test_cross_model_draft_token_identical(served_model):
+    """A different (random-weight) draft rarely agrees with the target,
+    but verification must keep the emitted chain identical regardless —
+    acceptance only changes the speed, never the tokens."""
+    cfg, model, params = served_model
+    tcfg = ARCHS["qwen3-1.7b"].reduced()
+    tmodel = build_model(tcfg)
+    tparams = tmodel.init(jax.random.PRNGKey(1))
+    mk = lambda: repetitive_requests(tcfg, n=2, gen=10, seed=3)
+    off = ServingEngine(tmodel, tparams, num_slots=2, max_seq=24,
+                        chunk_size=6).serve(mk(), seed=0, realtime=False)
+    eng = ServingEngine(tmodel, tparams, num_slots=2, max_seq=24,
+                        chunk_size=6, spec="draft", spec_k=3,
+                        spec_draft_model=model, spec_draft_params=params)
+    rep = eng.serve(mk(), seed=0, realtime=False)
+    for a, b in zip(off.sequences, rep.sequences):
+        assert a.generated == b.generated
+    assert rep.stats.spec_proposed > 0
+
+
+def test_draft_proposer_catchup_and_sync(served_model):
+    """Unit-level: the proposer ingests context incrementally, keeps the
+    accepted speculative prefix (it equals the committed tokens), and
+    rewinds the rejected tail."""
+    cfg, model, params = served_model
+    from repro.runtime.request import Sequence
+    prop = DraftModelProposer(model, params, num_slots=1, max_seq=32,
+                              chunk=4)
+    req = Request(rid=0, tokens=np.arange(6) + 3, max_new_tokens=8)
+    seq = Sequence(req)
+    seq.admit(0, 0.0)
+    seq.feed_chunk(6)
+    seq.start_decode()
+    seq.record_token(7, 0.0)
+    out = prop.propose({0: seq}, {0: 3})
+    assert out[0].shape == (3,)
+    assert prop._depth[0] == 7                 # prompt + first token
+    assert len(prop._tail[0]) == 2             # k - 1 speculative inserts
+    # commit one accepted proposal + a diverging bonus token
+    seq.record_token(int(out[0][0]), 0.0)
+    diverge = (int(out[0][1]) + 1) % cfg.vocab_size
+    seq.record_token(diverge, 0.0)             # != proposal: tail rewinds
+    out2 = prop.propose({0: seq}, {0: 2})
+    assert out2[0].shape == (2,)
+    assert prop._depth[0] == 9                 # 7 + accepted + committed
+
+
+# ----------------------------------------------------------------------
+# serve.py flag validation (fail fast, no silent fallback)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("argv", [
+    ["--spec-k", "4"],                               # spec-k without --spec
+    ["--spec-draft-model", "qwen3-0.6b"],            # draft model w/o spec
+    ["--spec", "draft"],                             # draft without model
+    ["--spec", "ngram", "--spec-draft-model", "x"],  # ngram + draft model
+    ["--paged-attn", "fused"],                       # paged attn, no arena
+    ["--num-blocks", "8"],                           # blocks without size
+    ["--spec", "ngram", "--chunk-size", "1"],        # no proposal lane
+    ["--spec", "ngram", "--arch", "mamba2-1.3b"],    # recurrent family
+    ["--spec", "ngram", "--mode", "batch"],          # lockstep has no spec
+    ["--spec", "ngram", "--spec-k", "0"],            # degenerate depth
+    ["--spec", "draft",                              # encdec can't draft
+     "--spec-draft-model", "whisper-small"],
+    ["--spec", "draft",                              # recurrent can't draft
+     "--spec-draft-model", "mamba2-1.3b"],
+])
+def test_serve_flag_validation_fails_fast(monkeypatch, argv):
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", ["serve.py", "--reduced"] + argv)
+    with pytest.raises(SystemExit) as exc:
+        serve.main()
+    assert exc.value.code == 2                       # argparse error exit
