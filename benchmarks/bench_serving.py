@@ -40,6 +40,16 @@ transfer term — must drop below 0.7x, because each verify step commits
 accept_len + 1 tokens against one stream. This is the ISSUE 5 acceptance
 metric, gated alongside the accept rate.
 
+Part 6 is the ISSUE 7 acceptance: refcounted copy-on-write prefix
+sharing. A shared-prefix workload (every request opens with the same
+long system prompt) runs against a warm prefix cache: prompt tokens
+mapped from cached pages are never re-streamed, so warm prefill h2d
+bytes must drop to <= 0.1x an unshared engine at the same concurrency,
+outputs must stay token-for-token identical (greedy) across
+unshared / cold-cache / warm-cache runs, and at equal arena bytes the
+deduplicated prefix must lift admission capacity > 3.5x over the
+contiguous arena.
+
 Runs on the reduced model (CPU-friendly); the analytic full-size numbers
 live in bench_e2e_latency.py. ``--json PATH`` writes the CI benchmark-
 regression metrics (see .github/workflows/ci.yml and
@@ -284,6 +294,102 @@ def speculative_amortization(cfg, model, params) -> None:
          f"(acceptance: < 0.7 at k=4, token-for-token identical)")
 
 
+def prefix_sharing(cfg, model, params) -> None:
+    """ISSUE 7 acceptance: refcounted copy-on-write prefix sharing.
+
+    Part A holds the workload fixed — 8 requests opening with the same
+    60-token system prompt (15 full blocks of 4); half are exactly the
+    prompt (full-hit: the last chain block is split copy-on-write at
+    admission), half add a 2-token tail — and compares a warm prefix
+    cache against an unshared engine at the same concurrency. Prompt
+    tokens served from shared pages never stream through the step, so
+    the warm run's prefill phase collapses to one step (re-feeding only
+    the uncached tail), and its prefill h2d bytes must drop to <= 0.1x
+    unshared. Outputs are pinned token-for-token identical (greedy)
+    across unshared / cold / warm, and the warm run must not re-jit.
+
+    Part B holds the arena bytes fixed (paged 15+1 null blocks x 4 ==
+    contiguous 2 slots x 32) on a 12-request shared-prefix stream: with
+    the 7 prefix blocks deduplicated every admission costs one private
+    block, so the paged+cache arena sustains 8 concurrent sequences
+    where the contiguous arena fits 2 (acceptance: > 3.5x)."""
+    P_LEN, P_BS, P_GEN = 60, 4, 2
+
+    def mk():
+        rng = np.random.RandomState(13)
+        sys_prompt = rng.randint(0, cfg.vocab_size, P_LEN)
+        reqs = []
+        for i in range(8):
+            toks = sys_prompt if i % 2 == 0 else np.concatenate(
+                [sys_prompt, rng.randint(0, cfg.vocab_size, 2)])
+            reqs.append(Request(rid=i, tokens=toks, max_new_tokens=P_GEN))
+        return reqs
+
+    mk_eng = lambda nb, pc: ServingEngine(
+        model, params, num_slots=8, max_seq=P_LEN + 4, block_size=P_BS,
+        num_blocks=nb, chunk_size=4, paged_attn="fused", prefix_cache=pc)
+    unshared = mk_eng(160, False)   # sized for 8-way unshared residency
+    ru = unshared.serve(mk(), seed=0, realtime=False)
+    shared = mk_eng(32, True)       # shared prefix fits 8-way in 32 blocks
+    rcold = shared.serve(mk(), seed=0, realtime=False)   # seeds the cache
+    rwarm = shared.serve(mk(), seed=0, realtime=False)   # every admission hits
+    for run_name, r in (("cold", rcold), ("warm", rwarm)):
+        assert r.sched.completed == 8
+        for a, b in zip(ru.sequences, r.sequences):
+            assert a.generated == b.generated, \
+                f"greedy {run_name}-cache serve diverged from unshared " \
+                f"on request {a.rid}"
+    assert rwarm.stats.prefix_hits == 8, rwarm.stats.prefix_hits
+    h2d_u = ru.transfers.phase_totals["prefill"]["h2d"]
+    h2d_w = rwarm.transfers.phase_totals["prefill"]["h2d"]
+    ratio = h2d_w / h2d_u
+    ptoks = sum(r.prompt_len for r in mk())
+    emit(f"serving/{ARCH}/prefix_unshared/prefill_h2d_per_prompt_token",
+         h2d_u / ptoks, f"prefill_h2d_MB={h2d_u/1e6:.3f} "
+         f"prompt_tokens={ptoks} step_compiles={ru.step_compiles}")
+    emit(f"serving/{ARCH}/prefix_warm/prefill_h2d_per_prompt_token",
+         h2d_w / ptoks,
+         f"prefill_h2d_MB={h2d_w/1e6:.3f} hits={rwarm.stats.prefix_hits}/8 "
+         f"hit_tokens={rwarm.stats.prefix_hit_tokens} "
+         f"cow_splits={rwarm.stats.cow_splits} "
+         f"step_compiles={rwarm.step_compiles}")
+    emit(f"serving/{ARCH}/prefix_warm/prefill_h2d_ratio", ratio,
+         "(acceptance: <= 0.1x unshared; shared pages are mapped, "
+         "never re-streamed; outputs pinned token-identical in-bench)")
+    METRICS["prefix_hit_prefill_h2d_ratio"] = ratio
+    METRICS["prefix_cache_step_compiles"] = rwarm.step_compiles
+
+    def mkb():
+        rng = np.random.RandomState(17)
+        sys_prompt = rng.randint(0, cfg.vocab_size, 28)   # 7 full blocks
+        return [Request(rid=i, tokens=np.concatenate(
+                    [sys_prompt, rng.randint(0, cfg.vocab_size, 2)]),
+                    max_new_tokens=2) for i in range(12)]
+
+    nb = CONT_SLOTS * PAGED_MAX_SEQ // P_BS - 1          # -1: null page
+    cont = ServingEngine(model, params, num_slots=CONT_SLOTS,
+                         max_seq=PAGED_MAX_SEQ, chunk_size=CHUNK)
+    paged = ServingEngine(model, params, num_slots=8,
+                          max_seq=PAGED_MAX_SEQ, block_size=P_BS,
+                          num_blocks=nb, chunk_size=CHUNK,
+                          paged_attn="fused", prefix_cache=True)
+    assert paged.arena.nbytes() == cont.arena.nbytes()
+    r_cont = cont.serve(mkb(), seed=0, realtime=False)
+    paged.serve(mkb(), seed=0, realtime=False)           # cold: seeds cache
+    r_paged = paged.serve(mkb(), seed=0, realtime=False)
+    assert r_cont.sched.completed == 12
+    assert r_paged.sched.completed == 12
+    gain = r_paged.sched.max_occupancy \
+        / max(r_cont.sched.max_occupancy, 1)
+    emit(f"serving/{ARCH}/prefix_equal_bytes/concurrency_gain", gain,
+         f"paged+cache={r_paged.sched.max_occupancy} "
+         f"contiguous={r_cont.sched.max_occupancy} "
+         f"hits={r_paged.stats.prefix_hits}/12 "
+         f"(acceptance: > 3.5x at equal arena bytes — 7 shared prefix "
+         f"blocks deduplicated, one private block per admission)")
+    METRICS["prefix_shared_concurrency_gain"] = gain
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
@@ -300,6 +406,7 @@ def main() -> None:
     chunked_comparison(cfg, model, params)
     paged_attn_scaling(cfg, model, params)
     speculative_amortization(cfg, model, params)
+    prefix_sharing(cfg, model, params)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "bench_serving", "arch": f"{ARCH}-reduced",

@@ -72,6 +72,8 @@ def build_stream(cfg, args, rng: np.random.RandomState):
     arrival offsets."""
     lo = max(args.prompt_len // 2, 2)
     samp = SamplingParams(temperature=args.temperature)
+    shared = rng.randint(0, cfg.vocab_size, args.shared_prefix) \
+        if args.shared_prefix else None
     t = 0.0
     reqs = []
     for i in range(args.requests):
@@ -79,8 +81,13 @@ def build_stream(cfg, args, rng: np.random.RandomState):
         if args.arrival == "poisson" and args.rate > 0:
             t += float(rng.exponential(1.0 / args.rate))
         extras = make_extras(cfg, 1)
+        tokens = rng.randint(0, cfg.vocab_size, L)
+        if shared is not None:
+            # system-prompt workload: every request opens with the same
+            # token prefix (what --prefix-cache deduplicates)
+            tokens = np.concatenate([shared, tokens])
         reqs.append(Request(
-            rid=i, tokens=rng.randint(0, cfg.vocab_size, L),
+            rid=i, tokens=tokens,
             max_new_tokens=args.gen, sampling=samp,
             arrival_s=t if args.arrival == "poisson" else 0.0,
             extras=extras or None))
@@ -121,7 +128,8 @@ def build_draft(args):
 def run_stream(cfg, model, params, args) -> None:
     rng = np.random.RandomState(args.seed)
     reqs = build_stream(cfg, args, rng)
-    max_seq = args.max_seq or (args.prompt_len + args.gen)
+    max_seq = args.max_seq or (args.shared_prefix + args.prompt_len
+                               + args.gen)
     decisions = offload_decisions(cfg, args.quant, args.prompt_len,
                                   args.gen) if args.offload_policy else None
     if args.quant != "none":
@@ -138,6 +146,7 @@ def run_stream(cfg, model, params, args) -> None:
         or None, paged_attn=args.paged_attn or "fused",
         spec=args.spec, spec_k=args.spec_k or 4,
         spec_draft_model=draft_model, spec_draft_params=draft_params,
+        prefix_cache=args.prefix_cache,
         host_sampling=args.host_sampling)
 
     report = engine.serve(reqs, seed=args.seed)
@@ -165,6 +174,12 @@ def run_stream(cfg, model, params, args) -> None:
               f"{report.sched.preemptions} | resident/token "
               f"{st.resident_bytes_per_token:.0f} B | peak resident "
               f"{st.peak_resident_bytes/1e6:.2f} MB")
+    if engine.prefix_cache:
+        pc = engine.arena.prefix_cache
+        print(f"  prefix cache: {st.prefix_hits}/{report.sched.admitted} "
+              f"admissions hit | {st.prefix_hit_tokens} prompt tokens "
+              f"from shared pages | {st.cow_splits} CoW splits | "
+              f"{len(pc)} cached chains ({pc.evictions} evicted)")
     if engine.spec != "off":
         print(f"  speculative[{engine.spec} k={engine.spec_k}]: "
               f"accept {st.spec_accepted}/{st.spec_proposed} "
@@ -219,6 +234,24 @@ def validate_args(ap, args) -> None:
     message, not measure the wrong configuration."""
     if args.num_blocks and not args.block_size:
         ap.error("--num-blocks requires --block-size (paged arena)")
+    if args.prefix_cache:
+        if not args.block_size:
+            ap.error("--prefix-cache requires the paged arena "
+                     "(--block-size): sharing works at block granularity")
+        if args.mode != "stream":
+            ap.error("--prefix-cache requires --mode stream")
+        fam = get_config(args.arch).family
+        if fam in ("ssm", "hybrid"):
+            ap.error(f"--prefix-cache is unsupported for the {fam!r} "
+                     f"family ({args.arch}): recurrent state is not "
+                     "addressable by token-block chains")
+        if fam in ("encdec", "vlm"):
+            ap.error(f"--prefix-cache is unsupported for the {fam!r} "
+                     f"family ({args.arch}): prompt KV depends on "
+                     "per-request encoder/vision conditioning, so equal "
+                     "token prefixes do not imply equal pages")
+    if args.shared_prefix < 0:
+        ap.error("--shared-prefix must be >= 0")
     if args.paged_attn and not args.block_size:
         ap.error(f"--paged-attn {args.paged_attn} requires a paged arena "
                  "(--block-size); the contiguous slot arena has no block "
@@ -302,6 +335,16 @@ def main() -> None:
     ap.add_argument("--spec-draft-model", default=None,
                     help="draft model arch for --spec draft (e.g. "
                          "qwen3-0.6b drafting for qwen3-8b)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted copy-on-write prefix sharing: map "
+                         "cached prompt prefixes (full token blocks) onto "
+                         "existing physical pages at admission instead of "
+                         "re-prefilling and re-streaming them; requires "
+                         "--block-size")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common tokens to every "
+                         "request (system-prompt workload — what "
+                         "--prefix-cache deduplicates)")
     ap.add_argument("--arrival", default="poisson",
                     choices=["poisson", "back2back"])
     ap.add_argument("--rate", type=float, default=8.0,

@@ -100,6 +100,12 @@ class GenStats:
     spec_proposed: int = 0
     spec_accepted: int = 0
     spec_rolled_back: int = 0
+    # Prefix sharing: admissions that mapped a cached prefix / prompt
+    # positions satisfied from shared pages (never streamed or computed)
+    # / copy-on-write block splits taken before a write.
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    cow_splits: int = 0
     transfers: Optional[TransferReport] = None
     draft_transfers: Optional[TransferReport] = None  # spec="draft" account
 
@@ -181,6 +187,7 @@ class ServingEngine:
                  spec_adaptive: bool = True,
                  spec_draft_model: Optional[ModelAPI] = None,
                  spec_draft_params=None,
+                 prefix_cache: bool = False,
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
                  cache_dtype=jnp.bfloat16):
@@ -217,6 +224,22 @@ class ServingEngine:
                 raise ValueError("spec='draft' supports decoder-only "
                                  "families (the draft has no encoder "
                                  "frames to condition on)")
+        if prefix_cache:
+            if block_size is None:
+                raise ValueError("prefix_cache requires the paged arena "
+                                 "(set block_size)")
+            if model.cfg.family in speculative.RECURRENT_FAMILIES:
+                raise ValueError(
+                    f"prefix_cache is unsupported for the "
+                    f"{model.cfg.family!r} family: recurrent state is not "
+                    "addressable by token-block chains")
+            if model.cfg.family in ("encdec", "vlm"):
+                raise ValueError(
+                    f"prefix_cache is unsupported for the "
+                    f"{model.cfg.family!r} family: prompt KV depends on "
+                    "per-request conditioning (encoder frames / vision "
+                    "embeddings), so equal token chains do not imply "
+                    "equal pages")
         self.model = model
         self.params = params
         self.quant = quant
@@ -244,6 +267,12 @@ class ServingEngine:
             max_seq=max_seq, chunk=self.chunk_size, quant=quant, impl=impl,
             cache_dtype=cache_dtype) if spec != "off" else None
         self._block_size, self._num_blocks = block_size, num_blocks
+        self.prefix_cache = prefix_cache
+        # CoW pad width: a step writes at most chunk_size consecutive
+        # positions per slot, spanning at most this many blocks — one
+        # static width keeps one _copy_pages compilation.
+        self._cow_pad = (-(-self.chunk_size // block_size) + 1) \
+            if block_size else 0
         self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
                                host_sampling=host_sampling)
@@ -311,11 +340,15 @@ class ServingEngine:
                                       self.max_seq,
                                       block_size=self._block_size,
                                       num_blocks=self._num_blocks,
-                                      dtype=self.cache_dtype)
+                                      dtype=self.cache_dtype,
+                                      prefix_cache=self.prefix_cache)
         else:
             self.arena = KVArena(self.model, self.num_slots, self.max_seq,
                                  dtype=self.cache_dtype)
         self.sched = Scheduler(self.num_slots, self.max_seq)
+        # rid -> (hit_tokens, resident_growth_blocks) recorded by the
+        # admission gate, consumed by _admit_chunked after seq.admit().
+        self._pending_prefix: Dict[int, tuple] = {}
 
     def reset(self) -> None:
         """Fresh arena + scheduler, warm jit caches — serve() runs are
@@ -329,6 +362,14 @@ class ServingEngine:
         all-or-nothing (reservation then follows chunk progress)."""
         if not self.paged:
             return self.arena.alloc()
+        if self.prefix_cache:
+            got = self.arena.alloc_slot_prefix(seq.req.tokens,
+                                               self.chunk_size)
+            if got is None:
+                return None
+            slot, hit, growth = got
+            self._pending_prefix[seq.rid] = (hit, growth)
+            return slot
         first = min(seq.req.prompt_len, self.chunk_size)
         return self.arena.alloc_slot(self.arena.blocks_needed(first))
 
@@ -337,17 +378,28 @@ class ServingEngine:
         """Chunked admission: no prefill pass. Reset the slot's constant
         state leaves (stale recurrent/cross state from the previous
         occupant); enc-dec models additionally run the one-time encoder
-        pass and scatter the cross KV into the slot."""
+        pass and scatter the cross KV into the slot. A prefix-cache hit
+        recorded by the admission gate fast-forwards the sequence past
+        the shared prompt positions — their KV already sits in mapped
+        pages, so they are neither streamed nor recomputed, and only
+        newly-resident blocks are charged as cache growth."""
         self.arena.reset_slot(seq.slot)
         if self._proposer is not None:
             reset = getattr(self._proposer, "reset_slot", None)
             if reset is not None:
                 reset(seq.slot)             # draft arena slot turnover
             self._spec_ctrl.reset(seq.slot)
+        hit, growth_blocks = self._pending_prefix.pop(seq.rid, (0, None))
         if self.paged:
+            if growth_blocks is None:
+                growth_blocks = len(self.arena.slot_blocks(seq.slot))
             ledger.charge_cache_growth(
-                "prefill", len(self.arena.slot_blocks(seq.slot))
-                * self.arena.block_bytes())
+                "prefill", growth_blocks * self.arena.block_bytes())
+        if hit:
+            seq.apply_prefix_hit(hit)
+            stats.prefix_hits += 1
+            stats.prefix_hit_tokens += hit
+            ledger.record_prefix_hit(hit)
         if self._encode_cross is not None and seq.req.extras \
                 and "frames" in seq.req.extras:
             t0 = time.perf_counter()
@@ -363,9 +415,18 @@ class ServingEngine:
             ledger.charge_cache_growth("prefill", cross_bytes)
 
     def _preempt(self, seq: Sequence) -> None:
-        """Recompute-preemption: reclaim the victim's slot and blocks and
-        push it back to the queue head."""
+        """Recompute-preemption: reclaim the victim's slot and blocks
+        (a decref per block — pages shared with siblings stay resident)
+        and push it back to the queue head. Speculative per-slot state
+        (accept-rate EMA, draft-arena mirror) is reset here, not only at
+        slot reuse: a preempted-then-readmitted sequence must restart
+        from clean speculation state, whichever slot it lands in."""
         slot = self.sched.preempt(seq)
+        if self._proposer is not None:
+            reset = getattr(self._proposer, "reset_slot", None)
+            if reset is not None:
+                reset(slot)
+            self._spec_ctrl.reset(slot)
         self.arena.free_slot(slot)
 
     def _reserve_blocks(self, ledger: TransferLedger) -> None:
@@ -386,17 +447,35 @@ class ServingEngine:
                 continue                        # preempted by an earlier turn
             phase = "prefill" if seq.state is SeqState.PREFILL else "decode"
             while True:
-                need = seq.position + self._next_feed_bound(seq)
-                fresh = self.arena.ensure(slot, need)
-                if fresh is not None:
-                    if fresh:
-                        ledger.charge_cache_growth(
-                            phase, fresh * self.arena.block_bytes())
+                bound = self._next_feed_bound(seq)
+                fresh = self.arena.ensure(slot, seq.position + bound)
+                if fresh is None:
+                    victim = self.sched.preempt_victim()
+                    self._preempt(victim)
+                    if victim is seq:
+                        break                   # evicted ourselves: skip step
+                    continue
+                if fresh:
+                    ledger.charge_cache_growth(
+                        phase, fresh * self.arena.block_bytes())
+                if not self.prefix_cache:
                     break
-                victim = self.sched.preempt_victim()
-                self._preempt(victim)
-                if victim is seq:
-                    break                       # evicted ourselves: skip step
+                # Copy-on-write barrier: any shared block the coming
+                # write range maps to is split now, so the collision-free
+                # scatter invariant holds before the step launches. A
+                # fresh copy is arena growth like any other block.
+                cow = self.arena.prepare_write(slot, seq.position, bound,
+                                               self._cow_pad)
+                if cow is None:
+                    victim = self.sched.preempt_victim()
+                    self._preempt(victim)
+                    if victim is seq:
+                        break                   # evicted ourselves: skip step
+                    continue
+                if cow:
+                    ledger.charge_cache_growth(
+                        phase, cow * self.arena.block_bytes())
+                break
 
     def _next_feed_bound(self, seq: Sequence) -> int:
         """Upper bound on the tokens ``seq`` feeds next step — what block
@@ -595,6 +674,12 @@ class ServingEngine:
                     ledger.charge_cache_growth("prefill", n * tok_bytes)
                 if seq.feed_chunk(n):
                     seq.start_decode()        # this chunk sampled token 0
+                    if self.prefix_cache:
+                        # Prefill complete: positions [0, prompt_len) are
+                        # all written, decode writes land strictly past
+                        # them — publish the full prompt blocks.
+                        self.arena.register_prefix(seq.slot,
+                                                   seq.req.tokens)
                     ledger.charge_sampled()
                     seq.record_token(int(nxt_host[slot]), now)
                     stats.decode_tokens += 1
@@ -647,7 +732,17 @@ class ServingEngine:
               realtime: bool = True) -> ServeReport:
         """Run a request stream to completion. ``realtime``: honor
         ``arrival_s`` offsets against the wall clock (sleep while idle);
-        False replays arrivals against the virtual step clock only."""
+        False replays arrivals against the virtual step clock only.
+
+        Each serve() run is an independent request stream: the scheduler
+        (queue, registry, stats) is rebuilt per run. The *arena* is not —
+        a later run on the same engine decodes against warm storage, so
+        with ``prefix_cache`` enabled, pages published by one run are hit
+        by the next (the system-prompt-across-streams case). ``reset()``
+        additionally rebuilds the arena, dropping the cache."""
+        if self.sched.stats.steps or self.sched.finished:
+            self.sched = Scheduler(self.num_slots, self.max_seq)
+            self._pending_prefix.clear()
         if self.paged:
             for r in requests:
                 # Last cache write lands at position prompt+gen-2 (the
@@ -669,6 +764,9 @@ class ServingEngine:
         stats = GenStats()
         ledger = TransferLedger(self.model.cfg, self.quant,
                                 **self._ledger_kw)
+        # The arena (and its prefix cache) outlives serve() runs — a warm
+        # cache is the point — so per-run CoW counts are deltas.
+        cow0 = self.arena.cow_splits if self.paged else 0
         key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
 
@@ -700,6 +798,8 @@ class ServingEngine:
             self._step_once(sub, stats, ledger, t0)
 
         stats.cache_bytes = self.arena.nbytes()
+        if self.paged:
+            stats.cow_splits = self.arena.cow_splits - cow0
         stats.tokens_in = sum(r.prompt_len for r in requests)
         stats.tokens_out = sum(s.tokens_out for s in self.sched.finished)
         stats.transfers = TransferReport.from_ledger(ledger)

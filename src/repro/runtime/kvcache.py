@@ -32,8 +32,10 @@ and paging compose without re-jit.
 from __future__ import annotations
 
 import functools
+import hashlib
 import heapq
-from typing import List, Optional, Tuple
+import weakref
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,11 +54,14 @@ def allocate(model: ModelAPI, batch: int, max_seq: int,
     return jax.tree.map(mk, shapes, is_leaf=lambda x: isinstance(x, tuple))
 
 
-# Probe results keyed by (model identity, shapes, dtype); the model
-# object is kept in the value so its id() can never be recycled while
-# the entry lives. ServingEngine.reset() rebuilds arenas — without this
-# every reset would re-trace the whole decode graph abstractly.
-_STEP_DTYPE_CACHE: dict = {}
+# Probe results keyed on the model by *weak* reference, then on the
+# (shapes, dtype) signature. ServingEngine.reset() rebuilds arenas —
+# without memoization every reset would re-trace the whole decode graph
+# abstractly. The weak key means a dropped model's entries vanish with
+# it: rebuilding engines in a loop cannot grow the cache without bound
+# (the old id(model)-keyed version pinned every model ever probed).
+_STEP_DTYPE_CACHE: "weakref.WeakKeyDictionary[ModelAPI, dict]" = \
+    weakref.WeakKeyDictionary()
 
 
 def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
@@ -75,10 +80,11 @@ def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
     Pure-attention models skip the probe entirely (no const leaves)."""
     if not any(const_flags):
         return tuple(dtype for _ in const_flags)
-    key = (id(model), batch, max_seq, jnp.dtype(dtype).name, const_flags)
-    hit = _STEP_DTYPE_CACHE.get(key)
+    per_model = _STEP_DTYPE_CACHE.setdefault(model, {})
+    key = (batch, max_seq, jnp.dtype(dtype).name, const_flags)
+    hit = per_model.get(key)
     if hit is not None:
-        return hit[1]
+        return hit
     specs = model.cache_specs(batch, max_seq, dtype)
     params = model.abstract_params()
     token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
@@ -96,14 +102,17 @@ def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
     probed = tuple(x.dtype for x in jax.tree.leaves(specs))
     out = tuple(pd if const else jnp.dtype(dtype)
                 for pd, const in zip(probed, const_flags))
-    _STEP_DTYPE_CACHE[key] = (model, out)
+    per_model[key] = out
     return out
 
 
 class _FreeHeap:
     """Min-heap free list with O(log n) alloc/free and a membership set
     guarding double-frees (the old list-based free list re-sorted the
-    whole list on every free — O(n log n) per release)."""
+    whole list on every free — O(n log n) per release). ``remove`` takes
+    a *specific* member out of the free list (prefix-cache resurrection
+    of a freed-but-still-cached block) by lazy deletion: the heap entry
+    stays behind and is skipped at pop when no longer in the set."""
 
     def __init__(self, n: int):
         self.n = n
@@ -111,14 +120,18 @@ class _FreeHeap:
         self._free_set = set(self._heap)
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._free_set)
+
+    def __contains__(self, i: int) -> bool:
+        return i in self._free_set
 
     def pop(self) -> Optional[int]:
-        if not self._heap:
-            return None
-        i = heapq.heappop(self._heap)
-        self._free_set.discard(i)
-        return i
+        while self._heap:
+            i = heapq.heappop(self._heap)
+            if i in self._free_set:             # skip lazily-removed ids
+                self._free_set.discard(i)
+                return i
+        return None
 
     def push(self, i: int) -> None:
         if i in self._free_set or not (0 <= i < self.n):
@@ -126,11 +139,26 @@ class _FreeHeap:
         heapq.heappush(self._heap, i)
         self._free_set.add(i)
 
+    def remove(self, i: int) -> None:
+        if i not in self._free_set:
+            raise ValueError(f"not free: {i}")
+        self._free_set.discard(i)
+
 
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` physical KV blocks of
-    ``block_size`` tokens each. All-or-nothing multi-block allocation
-    (an admission either gets its whole reservation or stays queued)."""
+    """Refcounted free-list allocator over ``num_blocks`` physical KV
+    blocks of ``block_size`` tokens each. All-or-nothing multi-block
+    allocation (an admission either gets its whole reservation or stays
+    queued).
+
+    Refcount lifecycle (prefix sharing): ``alloc`` hands out blocks at
+    refcount 1; ``share`` takes an extra reference on a block another
+    table already maps (or resurrects a refcount-0 block straight out of
+    the free list — its page contents are still intact); ``free`` is a
+    *decref* — a block returns to the free list only when its last
+    reference drops. A refcount-0 block keeps its page contents until
+    ``alloc`` reissues it, at which point the ``on_alloc`` hook fires so
+    the prefix cache can drop the stale entry."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 1 or block_size < 1:
@@ -142,6 +170,8 @@ class BlockAllocator:
         self._free = _FreeHeap(num_blocks)
         self._ever_used: set = set()
         self.reissues = 0               # allocations of a previously-freed block
+        self.refcounts: List[int] = [0] * num_blocks
+        self.on_alloc = None            # callback(block) on (re)issue
 
     # -- queries ---------------------------------------------------------
     @property
@@ -166,11 +196,107 @@ class BlockAllocator:
         out = [self._free.pop() for _ in range(n)]
         self.reissues += sum(1 for b in out if b in self._ever_used)
         self._ever_used.update(out)
+        for b in out:
+            self.refcounts[b] = 1
+            if self.on_alloc is not None:
+                self.on_alloc(b)
         return out
 
-    def free(self, blocks: List[int]) -> None:
+    def share(self, blocks: List[int]) -> None:
+        """Take one extra reference per block. A live block (refcount
+        >= 1) is simply increffed; a refcount-0 block still sitting in
+        the free list (freed but cached, contents intact) is resurrected
+        — pulled out of the free list with its page untouched."""
         for b in blocks:
-            self._free.push(b)
+            if not (0 <= b < self.num_blocks):
+                raise ValueError(f"bad share: {b}")
+            if self.refcounts[b] == 0:
+                self._free.remove(b)
+            self.refcounts[b] += 1
+
+    def free(self, blocks: List[int]) -> None:
+        """Drop one reference per block (decref). The block rejoins the
+        free list only at refcount 0; its page contents are left intact
+        so a prefix-cache entry can resurrect it until reissue."""
+        for b in blocks:
+            if not (0 <= b < self.num_blocks) or self.refcounts[b] <= 0:
+                raise ValueError(f"bad free: {b}")
+            self.refcounts[b] -= 1
+            if self.refcounts[b] == 0:
+                self._free.push(b)
+
+
+class PrefixCache:
+    """Host-side map from hashed token-block *chains* to physical pages.
+
+    Key for chain block ``i`` is the running SHA-256 over all prompt
+    tokens in blocks ``0..i`` — so a key identifies a full prefix, not a
+    bag of tokens, and lookup is a walk from the root that stops at the
+    first miss. Only **full** blocks are ever registered: the trailing
+    partial block of a live sequence is written by ``paged_insert_token``
+    every step and must stay exclusively owned.
+
+    The cache holds no references of its own — an entry over a
+    refcount-0 block is a *resurrection candidate*, not pinned memory.
+    Eviction is implicit: when the allocator reissues a freed block, the
+    ``invalidate_block`` hook drops its entry. Entries are 1:1 with
+    blocks, so the cache can never exceed ``num_blocks`` entries."""
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._by_key: Dict[bytes, int] = {}
+        self._by_block: Dict[int, bytes] = {}
+        self.hits = 0          # block-level lookup hits at admission
+        self.misses = 0        # full prompt blocks that missed
+        self.evictions = 0     # entries dropped on block reissue
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def keys_for(self, tokens, nfull: int) -> List[bytes]:
+        """Chain digests for the first ``nfull`` full blocks of a prompt."""
+        h = hashlib.sha256()
+        keys: List[bytes] = []
+        toks = np.asarray(tokens, np.int64)
+        for i in range(nfull):
+            h.update(toks[i * self.block_size:(i + 1) * self.block_size]
+                     .tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def lookup(self, keys: List[bytes]) -> List[int]:
+        """Longest cached chain prefix: physical blocks for consecutive
+        key hits from the root, stopping at the first miss."""
+        out: List[int] = []
+        for k in keys:
+            b = self._by_key.get(k)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._by_block
+
+    def register(self, key: bytes, block: int) -> bool:
+        """Publish ``key -> block``; no-op if the key is already mapped
+        (first writer wins — siblings sharing that entry already point at
+        the published page). Returns True if a new entry was added."""
+        if key in self._by_key:
+            return False
+        stale = self._by_block.pop(block, None)
+        if stale is not None:               # block re-published under a new chain
+            del self._by_key[stale]
+        self._by_key[key] = block
+        self._by_block[block] = key
+        return True
+
+    def invalidate_block(self, block: int) -> None:
+        """Allocator reissued ``block`` — its cached contents are gone."""
+        key = self._by_block.pop(block, None)
+        if key is not None:
+            del self._by_key[key]
+            self.evictions += 1
 
 
 class KVArena:
@@ -350,6 +476,22 @@ def _zero_paged_positions(leaves, phys, offs, paged_flags):
     return out
 
 
+@functools.partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _copy_pages(leaves, src, dst, paged_flags):
+    """Copy physical pages ``src[i] -> dst[i]`` across the paged leaves
+    (L, NB, bs, ...) — the copy-on-write split. Callers pad the pair
+    list to a fixed width with null->null entries (the null page's
+    contents are garbage by the layout contract, so self-copying it is
+    free) to keep one compilation per pad width."""
+    out = []
+    for a, is_paged in zip(leaves, paged_flags):
+        if not is_paged:
+            out.append(a)
+            continue
+        out.append(a.at[:, dst].set(a[:, src]))
+    return out
+
+
 @functools.partial(jax.jit, static_argnums=(4,), donate_argnums=(0,))
 def _paged_insert(buf_leaves, cache_leaves, phys, slot, paged_flags):
     """Scatter a B=1 prefill cache into an arena's physical blocks.
@@ -396,13 +538,21 @@ class PagedKVArena:
     reservation, all-or-nothing), ``ensure(slot, tokens)`` grows the table
     as decode crosses block boundaries (None on allocator exhaustion —
     the engine preempts), ``free_slot`` returns everything to the free
-    lists. Blocks owned by distinct slots never alias, so the per-step
-    scatter of new K/V through the table is collision-free.
+    lists.
+
+    With ``prefix_cache=True`` blocks become refcounted and distinct
+    slots MAY alias *full prompt blocks* (copy-on-write prefix sharing):
+    ``alloc_slot_prefix`` maps a cached prompt prefix onto existing
+    physical pages, ``register_prefix`` publishes a finished prefill's
+    full blocks, and ``prepare_write`` splits any shared block before a
+    write can land on it — so the per-step K/V scatter through the table
+    remains collision-free by invariant: every position a step writes
+    maps to an exclusively-owned (refcount-1) block.
     """
 
     def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
                  block_size: int, num_blocks: Optional[int] = None,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, prefix_cache: bool = False):
         if not (1 <= block_size <= max_seq):
             raise ValueError(f"block_size {block_size} outside [1, {max_seq}]")
         self.model = model
@@ -447,6 +597,16 @@ class PagedKVArena:
         self._slot_blocks: List[List[int]] = [[] for _ in range(num_slots)]
         self._dev_tables: Optional[jnp.ndarray] = None   # upload cache
         self.table_uploads = 0
+        self.cow_splits = 0             # copy-on-write block splits
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not self.has_paged:
+                raise ValueError(
+                    "prefix_cache requires paged (seq-indexed) KV leaves; "
+                    "constant-size recurrent state is not addressable by "
+                    "token-block chains")
+            self.prefix_cache = PrefixCache(block_size)
+            self.allocator.on_alloc = self.prefix_cache.invalidate_block
 
     # -- queries ---------------------------------------------------------
     def page_layout(self) -> dict:
@@ -513,6 +673,129 @@ class PagedKVArena:
         self.tables[slot, :len(blocks)] = blocks
         self._dev_tables = None
         return slot
+
+    def alloc_slot_prefix(self, prompt_tokens,
+                          chunk: int) -> Optional[Tuple[int, int, int]]:
+        """Admission with prefix-cache matching: map the longest cached
+        full-block chain of ``prompt_tokens`` onto existing physical
+        pages (shared, increffed) and allocate fresh blocks only for the
+        rest of the first feed. All-or-nothing like ``alloc_slot``.
+
+        Returns ``(slot, hit_tokens, resident_growth_blocks)`` or None.
+        ``hit_tokens`` prompt positions already hold valid KV — the
+        engine skips feeding them. At least one prompt token is always
+        re-fed (its logits seed sampling): when the *whole* prompt is
+        cached, the last chain block is split copy-on-write at admission
+        — position ``len - 1`` will be rewritten by that feed, and a
+        shared page must never be written. ``resident_growth_blocks``
+        counts blocks that newly became resident (fresh + resurrected;
+        shares of live blocks are free)."""
+        pc = self.prefix_cache
+        if pc is None:
+            raise ValueError("arena built without prefix_cache")
+        if self.free_slots == 0:
+            return None
+        L = len(prompt_tokens)
+        nfull = L // self.block_size
+        keys = pc.keys_for(prompt_tokens, nfull)
+        shared = pc.lookup(keys)
+        cow_src: Optional[int] = None
+        if shared and len(shared) * self.block_size >= L:
+            cow_src = shared[-1]        # fully cached: split the last block
+            shared = shared[:-1]
+        hit_blocks = len(shared) + (cow_src is not None)
+        h = (L - 1) if cow_src is not None else len(shared) * self.block_size
+        take = shared + ([cow_src] if cow_src is not None else [])
+        used0 = self.allocator.used_blocks
+        self.allocator.share(take)      # hold refs while we allocate/copy
+        need = self.blocks_needed(h + min(L - h, chunk))
+        fresh = self.allocator.alloc(need - hit_blocks
+                                     + (cow_src is not None))
+        if fresh is None:
+            self.allocator.free(take)   # roll the shares back
+            return None
+        if cow_src is not None:
+            dst = fresh[0]
+            leaves, treedef = jax.tree.flatten(self.buffers)
+            new = _copy_pages(leaves, jnp.asarray([cow_src], jnp.int32),
+                              jnp.asarray([dst], jnp.int32),
+                              self._paged_flags)
+            self.buffers = jax.tree.unflatten(treedef, new)
+            self.allocator.free([cow_src])
+            self.cow_splits += 1
+            blocks = shared + [dst] + fresh[1:]
+        else:
+            blocks = shared + fresh
+        slot = self._free_slots.pop()
+        self._slot_blocks[slot] = blocks
+        self.tables[slot] = self.null_block
+        self.tables[slot, :len(blocks)] = blocks
+        self._dev_tables = None
+        pc.hits += hit_blocks
+        pc.misses += nfull - hit_blocks
+        return slot, h, self.allocator.used_blocks - used0
+
+    def register_prefix(self, slot: int, prompt_tokens) -> int:
+        """Publish ``slot``'s full prompt blocks into the prefix cache
+        (called when prefill completes — positions [0, prompt_len) are
+        all written and decode writes land strictly past them). The
+        trailing partial block is never registered: it keeps taking
+        per-step writes and must stay exclusively owned. Idempotent —
+        chains already published (by this sequence's own cache hit, or a
+        sibling's earlier prefill) are skipped. Returns new entries."""
+        pc = self.prefix_cache
+        if pc is None or not self.has_paged:
+            return 0
+        nfull = len(prompt_tokens) // self.block_size
+        owned = self._slot_blocks[slot]
+        added = 0
+        for i, key in enumerate(pc.keys_for(prompt_tokens, nfull)):
+            if i >= len(owned):
+                break
+            added += pc.register(key, owned[i])
+        return added
+
+    def prepare_write(self, slot: int, start: int, count: int,
+                      width: int) -> Optional[int]:
+        """Copy-on-write barrier: make every block that positions
+        ``[start, start + count)`` map to exclusively owned before the
+        step writes there. Shared blocks (refcount > 1) are split —
+        pages copied to fresh blocks inside the jitted path, the table
+        remapped, the shared reference dropped. Returns the number of
+        blocks split (0 when nothing in range is shared) or None on
+        allocator exhaustion (the caller preempts a victim and retries).
+        ``width`` is the static pad width, so every split shares one
+        compilation per width."""
+        if count <= 0 or self.prefix_cache is None or not self.has_paged:
+            return 0
+        bs = self.block_size
+        owned = self._slot_blocks[slot]
+        b0 = start // bs
+        b1 = min((start + count - 1) // bs, len(owned) - 1)
+        cow = [(i, owned[i]) for i in range(b0, b1 + 1)
+               if self.allocator.refcounts[owned[i]] > 1]
+        if not cow:
+            return 0
+        fresh = self.allocator.alloc(len(cow))
+        if fresh is None:
+            return None
+        w = max(width, len(cow))
+        src = np.full((w,), self.null_block, np.int32)
+        dst = np.full((w,), self.null_block, np.int32)
+        for j, (_, old) in enumerate(cow):
+            src[j] = old
+            dst[j] = fresh[j]
+        leaves, treedef = jax.tree.flatten(self.buffers)
+        new = _copy_pages(leaves, jnp.asarray(src), jnp.asarray(dst),
+                          self._paged_flags)
+        self.buffers = jax.tree.unflatten(treedef, new)
+        for j, (i, _) in enumerate(cow):
+            owned[i] = fresh[j]
+            self.tables[slot, i] = fresh[j]
+        self.allocator.free([old for _, old in cow])   # drop shared refs
+        self._dev_tables = None
+        self.cow_splits += len(cow)
+        return len(cow)
 
     def ensure(self, slot: int, tokens: int) -> Optional[int]:
         """Grow ``slot``'s table to cover ``tokens`` positions. Returns
@@ -611,20 +894,34 @@ class PagedKVArena:
         """Erase cache positions ``[start, start + count)`` of ``slot``
         after a verification step rejected them: zero the page contents
         those positions map to through the (pre-trim) block table, then
-        trim the table tail — blocks wholly past the surviving prefix go
-        back to the allocator and their table entries reset to the null
-        sentinel, so resident-bytes accounting tracks the *accepted*
-        sequence length, not the speculated one. Returns the number of
-        blocks freed. ``width`` is the static pad width (the engine's
-        chunk size); unused pair lanes are routed to the null page, whose
-        contents are garbage by contract."""
+        trim the table tail — blocks wholly past the surviving prefix are
+        decreffed back to the allocator and their table entries reset to
+        the null sentinel, so resident-bytes accounting tracks the
+        *accepted* sequence length, not the speculated one. Returns the
+        number of blocks dropped from the table. ``width`` is the static
+        pad width (the engine's chunk size); unused pair lanes are routed
+        to the null page, whose contents are garbage by contract.
+
+        Prefix-sharing contract: zeroing is skipped for any position
+        whose block is shared (refcount > 1) or published in the prefix
+        cache — siblings (and future cache hits) still read those pages,
+        and a cached page's contents *are* the KV of its token chain, so
+        they stay valid regardless of this slot's rejection. The tail
+        trim still decrefs such blocks; they are reclaimed only when the
+        last reference drops."""
         if count <= 0 or not self.has_paged:
             return 0
         bs = self.block_size
         pos = np.arange(start, start + count)
         phys = np.full((width,), self.null_block, np.int32)
         offs = np.zeros((width,), np.int32)
-        phys[:count] = self.tables[slot, pos // bs]
+        blk = self.tables[slot, pos // bs]
+        pc = self.prefix_cache
+        zeroable = np.asarray(
+            [b != self.null_block
+             and self.allocator.refcounts[b] == 1
+             and (pc is None or not pc.is_cached(b)) for b in blk])
+        phys[:count] = np.where(zeroable, blk, self.null_block)
         offs[:count] = pos % bs
         leaves, treedef = jax.tree.flatten(self.buffers)
         new = _zero_paged_positions(leaves, jnp.asarray(phys),

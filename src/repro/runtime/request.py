@@ -112,6 +112,19 @@ class Sequence:
         self.position = 0
         self.next_token = int(self.req.tokens[0])
 
+    def apply_prefix_hit(self, hit: int) -> None:
+        """Fast-forward a fresh admission past ``hit`` prompt positions
+        whose KV the arena mapped from shared prefix-cache pages: they
+        are never streamed through the step. Always leaves at least one
+        prompt token to feed — the final prompt token's logits seed
+        sampling, so it is re-fed even when the whole prompt is cached
+        (the arena gives its block to this sequence copy-on-write)."""
+        assert self.state is SeqState.PREFILL and self.fed == 0
+        assert 0 < hit < self.req.prompt_len
+        self.fed = hit
+        self.position = hit
+        self.next_token = int(self.req.tokens[hit])
+
     # -- chunked prompt streaming ----------------------------------------
     @property
     def prompt_remaining(self) -> int:

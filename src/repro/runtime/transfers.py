@@ -91,6 +91,12 @@ class TransferLedger:
         # {phase: {category: {direction: bytes}}}
         self._cells: Dict[str, Dict[str, Dict[str, float]]] = {}
         self.tokens: Dict[str, int] = {p: 0 for p in PHASES}
+        # Prompt positions satisfied from shared prefix-cache pages:
+        # never streamed, never computed — the whole point of prefix
+        # sharing is that these charge NOTHING to the h2d cells (their
+        # KV reaches the step as a block-table entry, accounted under
+        # "tables"). Tallied so hit ratios can be reported.
+        self.prefix_hit_tokens: int = 0
 
     # -- raw charge ------------------------------------------------------
     def charge(self, phase: str, category: str, direction: str,
@@ -127,6 +133,11 @@ class TransferLedger:
 
     def charge_cache_growth(self, phase: str, nbytes: float) -> None:
         self.charge(phase, "kv_arena", DEV, nbytes)
+
+    def record_prefix_hit(self, tokens: int) -> None:
+        """``tokens`` prompt positions admitted onto shared pages — a
+        stat, not a byte charge (nothing moved)."""
+        self.prefix_hit_tokens += int(tokens)
 
     # -- unified-chunked-step charges -------------------------------------
     def _split_kernel_bytes(self, kv_len: int, new_tokens: int):
@@ -306,6 +317,7 @@ class TransferReport:
     weight_stream_bytes: float = 0.0
     kv_stream_bytes: float = 0.0
     weight_stream_bytes_per_token: float = 0.0
+    prefix_hit_tokens: int = 0
 
     @classmethod
     def from_ledger(cls, ledger: TransferLedger) -> "TransferReport":
@@ -316,4 +328,5 @@ class TransferReport:
                    weight_stream_bytes=ledger.weight_stream_bytes(),
                    kv_stream_bytes=ledger.kv_stream_bytes(),
                    weight_stream_bytes_per_token=(
-                       ledger.weight_stream_bytes_per_token()))
+                       ledger.weight_stream_bytes_per_token()),
+                   prefix_hit_tokens=ledger.prefix_hit_tokens)

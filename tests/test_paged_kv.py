@@ -54,6 +54,15 @@ def test_allocator_blocks_for():
     assert [a.blocks_for(t) for t in (1, 3, 4, 5, 8, 9)] == [1, 1, 1, 2, 2, 3]
 
 
+def test_allocator_zero_token_edges():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    assert a.blocks_for(0) == 1              # zero tokens still hold a block
+    assert a.alloc(0) == []                  # empty claim is legal, takes none
+    assert a.free_blocks == 8
+    with pytest.raises(ValueError):
+        a.alloc(-1)
+
+
 def _run_alloc_free_trace(num_blocks, block_size, ops):
     """Shared property oracle: replay an op trace against a set-model.
 
@@ -111,6 +120,15 @@ if HAVE_HYPOTHESIS:
                               st.integers(1, 40)), max_size=80))
     def test_allocator_properties_hypothesis(num_blocks, block_size, ops):
         _run_alloc_free_trace(num_blocks, block_size, ops)
+
+    @given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 65))
+    def test_blocks_for_covers_minimally(num_blocks, block_size, tokens):
+        """blocks_for is the least block count covering ``tokens``
+        (floored at one block), down to and including zero tokens."""
+        a = BlockAllocator(num_blocks, block_size)
+        n = a.blocks_for(tokens)
+        assert n >= 1 and n * block_size >= tokens
+        assert n == 1 or (n - 1) * block_size < tokens
 
 
 # ----------------------------------------------------------------------
@@ -195,6 +213,49 @@ def test_paged_prefill_bucket_overrun_is_dropped(gqa_model):
         - set(arena.slot_blocks(other)) - set(arena.slot_blocks(slot))
     for b in free:                                # free pool untouched
         assert bool(jnp.array_equal(leaf[:, b], before[:, b]))
+
+
+def test_paged_arena_zero_token_edges(gqa_model):
+    """Degenerate sizes must hold the arena's invariants: a zero-token
+    reservation still pins one block (blocks_needed floor), a zero-block
+    slot admission is a legal empty table that grows on demand, and a
+    rollback from position 0 trims the whole table."""
+    cfg, model, params = gqa_model
+    arena = PagedKVArena(model, num_slots=2, max_seq=16, block_size=4,
+                         num_blocks=4)
+    assert arena.blocks_needed(0) == 1
+    slot = arena.alloc_slot(0)               # admitted with an empty table
+    assert slot is not None and arena.slot_blocks(slot) == []
+    assert (arena.tables[slot] == arena.null_block).all()
+    assert arena.ensure(slot, 5) == 2        # grows from empty
+    arena.free_slot(slot)
+    assert arena.allocator.free_blocks == 4
+
+
+def test_paged_rollback_from_position_zero(gqa_model):
+    cfg, model, params = gqa_model
+    arena = PagedKVArena(model, num_slots=1, max_seq=16, block_size=4,
+                         num_blocks=4)
+    slot = arena.alloc_slot(2)
+    assert arena.rollback(slot, 0, 0, width=8) == 0    # empty span: no-op
+    assert arena.slot_blocks(slot) != []
+    dropped = arena.rollback(slot, 0, 8, width=8)      # reject everything
+    assert dropped == 2
+    assert arena.slot_blocks(slot) == []
+    assert (arena.tables[slot] == arena.null_block).all()
+    assert arena.allocator.free_blocks == 4
+
+
+def test_request_rejects_degenerate_prompts():
+    """The runtime contract is prompts >= 2 tokens (the final prompt
+    token is decoded, so 0- and 1-token prompts have no feedable
+    prefix); rejection happens at Request construction, not mid-serve."""
+    with pytest.raises(ValueError):
+        Request(rid=0, tokens=np.array([], np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError):
+        Request(rid=0, tokens=np.array([5], np.int32), max_new_tokens=1)
+    assert Request(rid=0, tokens=np.array([5, 6], np.int32),
+                   max_new_tokens=1).prompt_len == 2
 
 
 # ----------------------------------------------------------------------

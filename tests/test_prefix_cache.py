@@ -1,0 +1,455 @@
+"""Refcounted copy-on-write prefix sharing + runtime lifecycle fixes.
+
+Covers, in layers:
+- ``BlockAllocator`` refcount properties (hypothesis where available,
+  deterministic randomized traces otherwise): a referenced block is
+  never reclaimed, the refcount vector always equals the live table
+  references, conservation holds at every step, and a freed-but-cached
+  block resurrects with its page intact.
+- ``PrefixCache`` chain hashing: a key names a full prefix (divergence
+  propagates), lookup stops at the first miss, first writer wins,
+  reissue eviction drops stale entries.
+- Arena-level copy-on-write: admission hits map shared pages, the
+  write barrier splits shared blocks leaving sibling pages
+  bit-identical, full-prompt hits split the last chain block at
+  admission, speculative rollback never zeroes a shared or cached page.
+- End-to-end differentials across GQA/MLA x fused/ref: greedy outputs
+  are token-identical with sharing off / cold cache / warm cache.
+- Runtime lifecycle regressions riding along: preemption resets
+  speculative per-slot state, and the step-dtype probe cache is weakly
+  keyed (rebuilding models cannot grow it without bound).
+"""
+import gc
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.models.api import build_model
+from repro.runtime import kvcache
+from repro.runtime.engine import ServingEngine
+from repro.runtime.kvcache import (BlockAllocator, KVArena, PagedKVArena,
+                                   PrefixCache)
+from repro.runtime.request import Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------------------
+# BlockAllocator refcount properties
+# ----------------------------------------------------------------------
+def test_share_increfs_and_free_decrefs():
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    blocks = a.alloc(2)
+    assert [a.refcounts[b] for b in blocks] == [1, 1]
+    a.share(blocks)                          # sibling maps the same pages
+    assert [a.refcounts[b] for b in blocks] == [2, 2]
+    a.free(blocks)                           # first decref: still resident
+    assert a.free_blocks == 2
+    assert [a.refcounts[b] for b in blocks] == [1, 1]
+    a.free(blocks)                           # last decref: reclaimed
+    assert a.free_blocks == 4
+    with pytest.raises(ValueError):          # decref below zero
+        a.free([blocks[0]])
+    with pytest.raises(ValueError):          # share out of range
+        a.share([99])
+
+
+def test_share_resurrects_freed_block():
+    """A refcount-0 block still in the free list comes back out with its
+    page untouched (the prefix cache's resurrection path), and the
+    allocator then refuses to hand it to a fresh alloc."""
+    a = BlockAllocator(num_blocks=2, block_size=4)
+    (b,) = a.alloc(1)
+    a.free([b])
+    assert a.free_blocks == 2 and a.refcounts[b] == 0
+    a.share([b])                             # resurrect, not realloc
+    assert a.free_blocks == 1 and a.refcounts[b] == 1
+    other = a.alloc(1)
+    assert other is not None and b not in other
+    assert a.alloc(1) is None                # resurrected block not free
+
+
+def _run_refcount_trace(num_blocks, ops):
+    """Property oracle: replay alloc/adopt/free ops against a model of
+    live block tables (a table = a list of block references).
+
+    Invariants at every step: the allocator's refcount vector equals the
+    reference multiset over live tables, a referenced block is never in
+    the free list, used/free conserve, and every op leaves page identity
+    alone (shares/frees move counts, not contents)."""
+    a = BlockAllocator(num_blocks, 4)
+    tables = []
+    for kind, x in ops:
+        if kind == "alloc":
+            got = a.alloc(1 + x % 3)
+            if got is not None:
+                tables.append(list(got))
+        elif kind == "adopt":
+            # reference arbitrary blocks: increfs live ones, resurrects
+            # freed ones — both legal (the prefix cache vouches for
+            # contents; the allocator only tracks references)
+            blocks = [x % num_blocks]
+            a.share(blocks)
+            tables.append(blocks)
+        elif tables:                         # free one whole table
+            a.free(tables.pop(x % len(tables)))
+        live = Counter(b for t in tables for b in t)
+        assert sum(a.refcounts) == sum(live.values())
+        for b in range(num_blocks):
+            assert a.refcounts[b] == live.get(b, 0)
+            if a.refcounts[b] > 0:
+                assert b not in a._free, \
+                    f"block {b} reclaimed while referenced"
+        assert a.used_blocks == len(live)
+        assert a.free_blocks == num_blocks - len(live)
+    for t in tables:
+        a.free(t)
+    assert a.free_blocks == num_blocks
+
+
+def test_refcount_random_traces_deterministic():
+    for seed in range(8):
+        rng = np.random.RandomState(seed)
+        num_blocks = int(rng.randint(1, 24))
+        kinds = ["alloc", "adopt", "free"]
+        ops = [(kinds[rng.randint(3)], int(rng.randint(0, 64)))
+               for _ in range(60)]
+        _run_refcount_trace(num_blocks, ops)
+
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("prefix", max_examples=40, deadline=None)
+    settings.load_profile("prefix")
+
+    @given(st.integers(1, 24),
+           st.lists(st.tuples(st.sampled_from(["alloc", "adopt", "free"]),
+                              st.integers(0, 63)), max_size=80))
+    def test_refcount_properties_hypothesis(num_blocks, ops):
+        _run_refcount_trace(num_blocks, ops)
+
+
+# ----------------------------------------------------------------------
+# PrefixCache chain hashing
+# ----------------------------------------------------------------------
+def test_chain_keys_identify_full_prefixes():
+    pc = PrefixCache(block_size=4)
+    t1 = np.arange(12)
+    t2 = t1.copy()
+    t2[5] = 99                               # diverge inside block 1
+    k1, k2 = pc.keys_for(t1, 3), pc.keys_for(t2, 3)
+    assert k1[0] == k2[0]                    # shared root block
+    assert k1[1] != k2[1] and k1[2] != k2[2]  # divergence propagates
+
+
+def test_lookup_stops_at_first_miss():
+    pc = PrefixCache(block_size=4)
+    keys = pc.keys_for(np.arange(12), 3)
+    pc.register(keys[0], 0)
+    pc.register(keys[2], 2)                  # orphaned: chain gap at 1
+    assert pc.lookup(keys) == [0]
+    pc.register(keys[1], 1)
+    assert pc.lookup(keys) == [0, 1, 2]
+    assert not pc.register(keys[0], 3)       # first writer wins
+    assert pc.lookup(keys)[0] == 0
+
+
+def test_reissue_evicts_cache_entries():
+    """Freeing registered blocks keeps their entries (resurrection
+    candidates); only the allocator *reissuing* a block drops its entry
+    via the on_alloc hook."""
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    pc = PrefixCache(block_size=4)
+    a.on_alloc = pc.invalidate_block
+    blocks = a.alloc(2)
+    keys = pc.keys_for(np.arange(8), 2)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+    a.free(blocks)
+    assert pc.lookup(keys) == blocks         # cached though refcount 0
+    a.alloc(2)                               # reissues both -> eviction
+    assert pc.lookup(keys) == []
+    assert pc.evictions == 2 and len(pc) == 0
+
+
+# ----------------------------------------------------------------------
+# Arena-level copy-on-write (model-backed)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def gqa_model():
+    cfg = ASSIGNED["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = ASSIGNED["deepseek-v3-671b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _shared_pair(model, prompt, tail=2):
+    """Arena with slot A owning ``prompt`` (registered) and slot B
+    admitted through a cache hit on prompt+tail. Returns the arena and
+    both admissions."""
+    arena = PagedKVArena(model, num_slots=2, max_seq=16, block_size=4,
+                         num_blocks=8, prefix_cache=True)
+    got_a = arena.alloc_slot_prefix(prompt, chunk=16)
+    assert got_a is not None
+    slot_a, hit_a, growth_a = got_a
+    assert hit_a == 0 and growth_a == arena.blocks_needed(len(prompt))
+    arena.register_prefix(slot_a, prompt)
+    longer = np.concatenate([prompt, np.arange(tail) + 7])
+    got_b = arena.alloc_slot_prefix(longer, chunk=16)
+    assert got_b is not None
+    return arena, (slot_a, prompt), got_b
+
+
+def test_admission_hit_maps_shared_pages(gqa_model):
+    _, model, _ = gqa_model
+    prompt = np.arange(8)                    # 2 full blocks
+    arena, (slot_a, _), (slot_b, hit, growth) = _shared_pair(model, prompt)
+    assert hit == 8                          # both full blocks mapped
+    assert growth == 1                       # only the tail block is new
+    assert arena.slot_blocks(slot_b)[:2] == arena.slot_blocks(slot_a)
+    for b in arena.slot_blocks(slot_a):
+        assert arena.allocator.refcounts[b] == 2
+    assert arena.prefix_cache.hits == 2
+
+
+def test_prepare_write_splits_and_preserves_siblings(gqa_model):
+    _, model, _ = gqa_model
+    prompt = np.arange(8)
+    arena, (slot_a, _), (slot_b, hit, _) = _shared_pair(model, prompt)
+    blocks_a = arena.slot_blocks(slot_a)
+    before = jax.tree.leaves(arena.buffers)[0].copy()
+    # barrier over positions 4..9: block 1 is shared (split), block 2 is
+    # slot B's own tail block (left alone)
+    split = arena.prepare_write(slot_b, 4, 6, width=4)
+    assert split == 1 and arena.cow_splits == 1
+    assert arena.slot_blocks(slot_a) == blocks_a       # sibling table intact
+    leaf = jax.tree.leaves(arena.buffers)[0]
+    for b in blocks_a:                       # sibling pages bit-identical
+        assert bool(jax.numpy.array_equal(leaf[:, b], before[:, b]))
+    new_b1 = arena.slot_blocks(slot_b)[1]
+    assert new_b1 != blocks_a[1]
+    assert bool(jax.numpy.array_equal(leaf[:, new_b1],
+                                      before[:, blocks_a[1]]))
+    assert arena.allocator.refcounts[blocks_a[1]] == 1  # share dropped
+    # barrier is idempotent: nothing shared remains in range
+    assert arena.prepare_write(slot_b, 4, 6, width=4) == 0
+
+
+def test_full_prompt_hit_splits_last_block_at_admission(gqa_model):
+    """A fully-cached prompt still re-feeds its final token (the logits
+    seed sampling), so the last chain block is CoW-split *at admission*
+    — the write never lands on the published page."""
+    _, model, _ = gqa_model
+    prompt = np.arange(8)
+    arena = PagedKVArena(model, num_slots=2, max_seq=16, block_size=4,
+                         num_blocks=8, prefix_cache=True)
+    slot_a, _, _ = arena.alloc_slot_prefix(prompt, chunk=16)
+    arena.register_prefix(slot_a, prompt)
+    blocks_a = arena.slot_blocks(slot_a)
+    before = jax.tree.leaves(arena.buffers)[0].copy()
+    got = arena.alloc_slot_prefix(prompt, chunk=16)    # identical prompt
+    assert got is not None
+    slot_b, hit, growth = got
+    assert hit == len(prompt) - 1 and arena.cow_splits == 1
+    blocks_b = arena.slot_blocks(slot_b)
+    assert blocks_b[0] == blocks_a[0]        # root block shared
+    assert blocks_b[1] != blocks_a[1]        # last chain block split
+    leaf = jax.tree.leaves(arena.buffers)[0]
+    assert bool(jax.numpy.array_equal(leaf[:, blocks_b[1]],
+                                      before[:, blocks_a[1]]))
+    assert arena.allocator.refcounts[blocks_a[1]] == 1
+    assert growth == 1                       # one new resident block
+
+
+def test_rollback_spares_shared_and_cached_pages(gqa_model):
+    _, model, _ = gqa_model
+    prompt = np.arange(8)
+    arena, (slot_a, _), (slot_b, _, _) = _shared_pair(model, prompt)
+    blocks_a = arena.slot_blocks(slot_a)
+    before = jax.tree.leaves(arena.buffers)[0].copy()
+    # reject positions 4..9 of slot B: block 1 is shared (skip zeroing,
+    # decref on trim), the tail block is exclusive (zeroed + reclaimed)
+    dropped = arena.rollback(slot_b, 4, 6, width=8)
+    assert dropped == 2
+    leaf = jax.tree.leaves(arena.buffers)[0]
+    for b in blocks_a:
+        assert bool(jax.numpy.array_equal(leaf[:, b], before[:, b])), \
+            "rollback zeroed a page a sibling still reads"
+    assert arena.slot_blocks(slot_a) == blocks_a
+    assert [arena.allocator.refcounts[b] for b in blocks_a] == [2, 1]
+    # cached-but-exclusive pages survive zeroing too (the cache entry IS
+    # the chain's KV): slot A rolls back over its own registered block
+    dropped = arena.rollback(slot_a, 4, 4, width=8)
+    assert dropped == 1
+    leaf = jax.tree.leaves(arena.buffers)[0]
+    assert bool(jax.numpy.array_equal(leaf[:, blocks_a[1]],
+                                      before[:, blocks_a[1]]))
+    assert arena.allocator.refcounts[blocks_a[1]] == 0
+    assert arena.prefix_cache.is_cached(blocks_a[1])   # resurrection-ready
+
+
+def test_resurrection_after_all_references_drop(gqa_model):
+    """Retiring every sequence leaves cached pages in the free list;
+    a later admission of the same prefix resurrects them — same block
+    ids, zero bytes re-streamed — and growth accounting counts them as
+    newly resident."""
+    _, model, _ = gqa_model
+    prompt = np.arange(8)
+    arena = PagedKVArena(model, num_slots=2, max_seq=16, block_size=4,
+                         num_blocks=8, prefix_cache=True)
+    slot_a, _, _ = arena.alloc_slot_prefix(prompt, chunk=16)
+    arena.register_prefix(slot_a, prompt)
+    blocks = arena.slot_blocks(slot_a)
+    arena.free_slot(slot_a)
+    assert arena.allocator.free_blocks == 8            # fully reclaimed
+    got = arena.alloc_slot_prefix(np.concatenate([prompt, [3, 4]]),
+                                  chunk=16)
+    assert got is not None
+    slot_b, hit, growth = got
+    assert hit == 8
+    assert arena.slot_blocks(slot_b)[:2] == blocks     # same physical pages
+    assert growth == 3                       # 2 resurrected + 1 fresh
+
+
+# ----------------------------------------------------------------------
+# End-to-end differential: sharing on == sharing off (GQA/MLA x impls)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch,impl", [
+    ("qwen3-0.6b", "fused"), ("qwen3-0.6b", "ref"),
+    ("deepseek-v3-671b", "fused"), ("deepseek-v3-671b", "ref")])
+def test_shared_serve_matches_unshared(arch, impl, gqa_model, mla_model):
+    """The same shared-prefix greedy stream through prefix_cache=False,
+    a cold cache, and a warm cache emits identical tokens — sharing
+    changes which physical pages positions map to, never their values.
+    The warm run must actually hit, and retiring everything must return
+    the allocator to empty (cached pages are refcount-0 residents of the
+    free list, not leaks)."""
+    cfg, model, params = gqa_model if arch == "qwen3-0.6b" else mla_model
+    sysp = np.random.RandomState(4).randint(0, cfg.vocab_size, 12)
+
+    def mk():
+        r = np.random.RandomState(5)
+        reqs = []
+        for i in range(6):
+            ntail = int(r.randint(0, 4))     # 0 -> full-prompt hit path
+            tail = r.randint(0, cfg.vocab_size, ntail)
+            reqs.append(Request(
+                rid=i, tokens=np.concatenate([sysp, tail]),
+                max_new_tokens=4))
+        return reqs
+
+    mk_eng = lambda pc: ServingEngine(
+        model, params, num_slots=3, max_seq=24, block_size=4,
+        num_blocks=24, paged_attn=impl, prefix_cache=pc)
+    base = mk_eng(False).serve(mk(), seed=0, realtime=False)
+    shared = mk_eng(True)
+    cold = shared.serve(mk(), seed=0, realtime=False)
+    warm = shared.serve(mk(), seed=0, realtime=False)
+    assert warm.stats.prefix_hits == 6
+    assert warm.stats.prefix_hit_tokens > 0
+    assert warm.transfers.prefix_hit_tokens == warm.stats.prefix_hit_tokens
+    assert warm.step_compiles == 1           # cumulative: no new compile
+                                             # beyond the cold run's one
+    for run_name, rep in (("cold", cold), ("warm", warm)):
+        assert rep.sched.completed == 6
+        for a, b in zip(base.sequences, rep.sequences):
+            assert a.rid == b.rid
+            assert a.generated == b.generated, \
+                f"{arch}/{impl}: {run_name}-cache serve diverged from " \
+                f"unshared on request {a.rid}"
+    assert shared.arena.allocator.free_blocks == 24
+    assert shared.arena.free_slots == 3
+
+
+def test_shared_serve_under_preemption(gqa_model):
+    """Scarce blocks + sharing: preemption decrefs shared tail blocks
+    without zeroing pages siblings read, every request completes, and
+    greedy tokens still match an uncontended unshared run."""
+    cfg, model, params = gqa_model
+    sysp = np.random.RandomState(6).randint(0, cfg.vocab_size, 8)
+    mk = lambda: [Request(rid=i, tokens=np.concatenate(
+                      [sysp, np.random.RandomState(10 + i)
+                       .randint(0, cfg.vocab_size, 2)]),
+                      max_new_tokens=8) for i in range(4)]
+    ref = ServingEngine(model, params, num_slots=4, max_seq=24) \
+        .serve(mk(), seed=0, realtime=False)
+    eng = ServingEngine(model, params, num_slots=4, max_seq=24,
+                        block_size=4, num_blocks=9, prefix_cache=True)
+    rep = eng.serve(mk(), seed=0, realtime=False)
+    assert rep.sched.completed == 4
+    assert rep.sched.preemptions > 0
+    assert rep.stats.prefix_hits > 0
+    for got, want in zip(rep.sequences, ref.sequences):
+        assert got.generated == want.generated
+    assert eng.arena.allocator.free_blocks == 9
+
+
+# ----------------------------------------------------------------------
+# Runtime lifecycle regressions (satellites)
+# ----------------------------------------------------------------------
+def test_preemption_resets_speculative_state(gqa_model):
+    """_preempt must reset per-slot speculation state (accept-rate EMA,
+    proposer slot mirror), not only slot-reuse admission: a preempted
+    sequence re-admits into *some* slot with clean state. Pins the count
+    of resets >= admissions + preemptions (the old code reset only at
+    admission) and that spec+preemption stays lossless."""
+    cfg, model, params = gqa_model
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, 8) for _ in range(4)]
+    mk = lambda: [Request(rid=i, tokens=p.copy(), max_new_tokens=10)
+                  for i, p in enumerate(prompts)]
+    eng = ServingEngine(model, params, num_slots=4, max_seq=24,
+                        block_size=4, num_blocks=6, spec="ngram",
+                        spec_k=4)
+    ctrl_resets, prop_resets = [], []
+    orig_reset = eng._spec_ctrl.reset
+    eng._spec_ctrl.reset = lambda s: (ctrl_resets.append(s),
+                                      orig_reset(s))[1]
+    # the ngram proposer is slotless; attach a spy so the proposer-reset
+    # branch of _preempt is exercised too
+    eng._proposer.reset_slot = prop_resets.append
+    rep = eng.serve(mk(), seed=0, realtime=False)
+    assert rep.sched.completed == 4
+    assert rep.sched.preemptions > 0
+    floor = rep.sched.admitted + rep.sched.preemptions
+    assert len(ctrl_resets) >= floor
+    assert len(prop_resets) >= floor
+    ref = ServingEngine(model, params, num_slots=4, max_seq=24) \
+        .serve(mk(), seed=0, realtime=False)
+    for got, want in zip(rep.sequences, ref.sequences):
+        assert got.generated == want.generated
+
+
+def test_step_dtype_cache_is_weakly_bounded():
+    """The step-dtype probe memo must not pin models: rebuilding a
+    model (with const-state leaves, so the probe actually runs) in a
+    loop leaves the cache at its starting size once the models die."""
+    cfg = ASSIGNED["mamba2-1.3b"].reduced()
+    gc.collect()
+    base = len(kvcache._STEP_DTYPE_CACHE)
+    for _ in range(3):
+        model = build_model(cfg)
+        arena = KVArena(model, num_slots=2, max_seq=8)
+        assert len(kvcache._STEP_DTYPE_CACHE) == base + 1
+        # same model, different signature: one weak entry, two memo keys
+        KVArena(model, num_slots=3, max_seq=8)
+        assert len(kvcache._STEP_DTYPE_CACHE) == base + 1
+        assert len(kvcache._STEP_DTYPE_CACHE[model]) == 2
+        del model, arena
+        gc.collect()
+        assert len(kvcache._STEP_DTYPE_CACHE) == base, \
+            "dead model still pinned by the dtype-probe cache"
