@@ -4,14 +4,72 @@
     impact on the final computational accuracy" — we quantify: the extra
     error must be small relative to Q3_K's own quantization error.
   * Per-format weight round-trip error ordering: fp16 < q8_0 < q6_k < q3_k.
+  * int8 KV pages (ISSUE 8): the paged arena's per-(position, kv-head)
+    absmax quantization is the same 8-bit family as q8_0 (absmax over a
+    small block), so its round-trip error must land inside the q8_0
+    envelope — and the e2e teacher-forced perplexity drift it induces
+    through real decode steps must stay within that envelope too.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
+from repro.configs.registry import get_config
 from repro.core.quant import dequant, pack
+from repro.models.api import build_model
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.runtime.kvcache import KVArena
+
+
+def kv_perplexity_drift(q8_envelope: float) -> None:
+    """E2e perplexity drift of int8 KV storage, teacher-forced.
+
+    A random token stream is prefilled and then decoded step by step on
+    the reduced qwen3-0.6b, collecting the NLL of each reference next
+    token. The quantized variant round-trips every KV arena leaf through
+    ``quantize_kv``/``dequantize_kv`` before each step, so every cache
+    read sees exactly what int8 page storage would hold — the storage
+    format's effect isolated from paged plumbing. Acceptance: relative
+    perplexity drift within the q8_0 round-trip envelope (both are 8-bit
+    absmax schemes; NLL averaging makes the e2e drift far smaller than
+    the per-element error)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(29)
+    T, P = 96, 16
+    toks = rng.randint(0, cfg.vocab_size, (1, T))
+    _, cache0 = model.prefill(params, {"tokens": jnp.asarray(toks[:, :P])})
+    roundtrip = jax.jit(jax.tree_util.Partial(
+        jax.tree.map, lambda x: dequantize_kv(*quantize_kv(x)).astype(
+            x.dtype)))
+    step = jax.jit(lambda p, t, pos, c: model.decode_step(p, t, pos, c))
+    ppl = {}
+    for name in ("fp", "int8"):
+        arena = KVArena(model, 1, T, dtype=jnp.float32)
+        arena.write_prefill(cache0, 0)
+        cache = arena.buffers
+        nll = []
+        for t in range(P, T - 1):
+            if name == "int8":
+                cache = roundtrip(cache)
+            logits, cache = step(params, jnp.asarray(toks[:, t:t + 1]),
+                                 jnp.asarray([t], jnp.int32), cache)
+            logp = jax.nn.log_softmax(logits[0, -1].astype(jnp.float32))
+            nll.append(-float(logp[int(toks[0, t + 1])]))
+        ppl[name] = float(np.exp(np.mean(nll)))
+    drift = abs(ppl["int8"] - ppl["fp"]) / ppl["fp"]
+    emit("quant_accuracy/kv_int8/perplexity_drift", 0.0,
+         f"ppl_fp={ppl['fp']:.3f} ppl_int8={ppl['int8']:.3f} "
+         f"rel_drift={drift:.5f} within_q8_0_envelope="
+         f"{drift < q8_envelope} (acceptance: e2e teacher-forced drift "
+         f"inside the q8_0 round-trip envelope {q8_envelope:.4f})")
+    assert drift < q8_envelope, \
+        f"kv int8 perplexity drift {drift:.5f} outside q8_0 envelope " \
+        f"{q8_envelope:.4f}"
 
 
 def main() -> None:
@@ -27,6 +85,21 @@ def main() -> None:
              f"rel_err={errs[fmt]:.4f}")
     ordered = errs["fp16"] < errs["q8_0"] < errs["q6_k"] < errs["q3_k"]
     emit("quant_accuracy/error_ordering", 0.0, f"monotone={ordered}")
+
+    # int8 KV page round-trip: per-(position, kv-head) absmax over the
+    # trailing feature axis — same 8-bit absmax family as q8_0's
+    # 32-element blocks, so the error envelopes must match (1.5x
+    # headroom: fp16 scale storage + head_dim-sized blocks).
+    kv = jax.random.normal(jax.random.PRNGKey(11),
+                           (64, 8, 32), jnp.float32) * 0.3
+    kvd = dequantize_kv(*quantize_kv(kv))
+    kv_err = float(jnp.linalg.norm(kvd - kv)) / float(jnp.linalg.norm(kv))
+    emit("quant_accuracy/kv_int8/roundtrip_rel_err", 0.0,
+         f"rel_err={kv_err:.4f} q8_0_envelope={errs['q8_0']:.4f} "
+         f"within={kv_err < 1.5 * errs['q8_0']}")
+    assert kv_err < 1.5 * errs["q8_0"], \
+        f"kv int8 round-trip {kv_err:.4f} outside q8_0 envelope"
+    kv_perplexity_drift(1.5 * errs["q8_0"])
 
     p3 = pack.quantize(w, "q3_k")
     w3 = dequant.dequantize_q3_k(p3)

@@ -29,6 +29,17 @@ also V), and the decoupled RoPE side joins the scores through the
 optional ``q2``/``k2_pages`` operands — so the compressed cache is
 attended in place, never expanded *and* never gathered.
 
+Quantized pages (``k_scales`` passed): K/V pages hold int8 codes and a
+parallel *scale page* per pages operand carries one float16 scale per
+(in-page position, kv-head) — ``(NP, bs, Hkv)`` next to ``(NP, bs,
+Hkv, D)`` — quantized over the feature axis at insert time (see
+``PagedKVArena.page_layout``). The kernel dequantizes in VMEM inside
+the block walk (``k = int8 * scale`` in f32, same for V and the MLA
+RoPE side), so the per-block DMA moves ~(D+2)/(2D) of the bf16 bytes
+and the arithmetic is unchanged f32 online softmax. A zeroed page
+dequantizes to exactly zero (code 0 x scale 0), so the arena's
+rollback/CoW/null-page contracts carry over bit-for-bit.
+
 Grid: ``(B, Hkv, MB)`` with f32 running max/sum statistics carried in
 VMEM scratch across the kv-block axis. Blocks past a slot's live depth
 (``base + C - 1``) are skipped two ways: the index map clamps to the
@@ -52,20 +63,31 @@ from repro.kernels.common import MASK_VALUE
 
 
 def _kernel(tables_ref, pos_ref, len_ref, *refs, sm_scale, block_size,
-            group, has_rope, shared_kv):
+            group, has_rope, shared_kv, quantized):
     """One (slot, kv-head, kv-block) step of the online softmax."""
-    if has_rope:
-        q1_ref, q2_ref, k1_ref, k2_ref = refs[:4]
-        rest = refs[4:]
-    else:
-        q1_ref, k1_ref = refs[:2]
-        q2_ref = k2_ref = None
-        rest = refs[2:]
+    refs = list(refs)
+    q1_ref = refs.pop(0)
+    q2_ref = refs.pop(0) if has_rope else None
+    k1_ref = refs.pop(0)
+    k1s_ref = refs.pop(0) if quantized else None
+    k2_ref = refs.pop(0) if has_rope else None
+    k2s_ref = refs.pop(0) if has_rope and quantized else None
     # MLA's compressed latents are both K and V: sharing the ref means
     # one DMA per live block, not two.
-    v_ref = k1_ref if shared_kv else rest[0]
-    o_ref = rest[0 if shared_kv else 1]
+    v_ref = k1_ref if shared_kv else refs.pop(0)
+    vs_ref = k1s_ref if shared_kv else (refs.pop(0) if quantized else None)
+    o_ref = refs.pop(0)
     acc_ref, m_ref, l_ref = refs[-3:]
+
+    def page(ref, s_ref):
+        """(bs, D) f32 page tile, dequantized when the arena is int8:
+        code * per-(position, kv-head) scale — a zeroed page (code 0,
+        scale 0) dequantizes to exactly 0, preserving the rollback
+        bit-identity contract on the quantized layout."""
+        x = ref[0, :, 0, :].astype(jnp.float32)
+        if s_ref is not None:
+            x = x * s_ref[0, :, 0].astype(jnp.float32)[:, None]
+        return x
     b = pl.program_id(0)
     j = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -86,14 +108,14 @@ def _kernel(tables_ref, pos_ref, len_ref, *refs, sm_scale, block_size,
     @pl.when(j <= last_live)
     def _body():
         q = q1_ref[0, 0].astype(jnp.float32)              # (CG, D)
-        k = k1_ref[0, :, 0, :].astype(jnp.float32)        # (bs, D)
+        k = page(k1_ref, k1s_ref)                         # (bs, D)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (CG, bs)
         if has_rope:                                      # MLA rope scores
             s = s + jax.lax.dot_general(
                 q2_ref[0, 0].astype(jnp.float32),
-                k2_ref[0, :, 0, :].astype(jnp.float32),
+                page(k2_ref, k2s_ref),
                 (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
         s = s * sm_scale
@@ -106,9 +128,9 @@ def _kernel(tables_ref, pos_ref, len_ref, *refs, sm_scale, block_size,
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = k if shared_kv else page(v_ref, vs_ref)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v_ref[0, :, 0, :].astype(jnp.float32),
-            (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
@@ -133,6 +155,7 @@ def _fold_heads(x, b, c, hkv, group):
     static_argnames=("sm_scale", "out_dtype", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
                            sm_scale: float, q2=None, k2_pages=None,
+                           k_scales=None, v_scales=None, k2_scales=None,
                            lengths=None, out_dtype=None,
                            interpret: bool = False):
     """Fused paged decode attention over a chunk of C queries per slot.
@@ -147,11 +170,23 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
     valid queries per row (chunked prefill) — each row's block walk
     stops at its last *valid* query's causal depth, so a steady-state
     decode row (lengths == 1) never over-fetches for its garbage tail.
+
+    Quantized arenas pass int8 pages plus ``k_scales``/``v_scales``/
+    ``k2_scales`` — (NP, bs, Hkv) per-(position, kv-head) scale pages
+    riding the same block-table index map — and the kernel dequantizes
+    inside the block walk (all scale operands must accompany their
+    pages; ``v_scales`` is omitted exactly when ``v_pages`` is).
     Returns (B, C, H, Dv) in ``out_dtype`` (default q.dtype).
     """
     b, c, h, d = q.shape
     num_pages, bs, hkv, _ = k_pages.shape
     shared_kv = v_pages is None
+    quantized = k_scales is not None
+    if quantized:
+        assert (v_scales is None) == shared_kv, \
+            "v_scales must accompany v_pages"
+        assert (k2_scales is None) == (k2_pages is None), \
+            "k2_scales must accompany k2_pages"
     dv = k_pages.shape[-1] if shared_kv else v_pages.shape[-1]
     assert h % hkv == 0, (h, hkv)
     group = h // hkv
@@ -173,6 +208,13 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
     def q_index(bb, hh, jj, tables, pos, lens):
         return (bb, hh, 0, 0)
 
+    def scale_index(bb, hh, jj, tables, pos, lens):
+        # Scale pages (NP, bs, Hkv) ride the same clamped table walk as
+        # their int8 pages — one extra (bs,) fetch per live block.
+        last = (pos[bb] + jnp.maximum(lens[bb], 1) - 1) // bs
+        return (tables[bb, jnp.minimum(jj, last)], 0, hh)
+
+    scale_spec = pl.BlockSpec((1, bs, 1), scale_index)
     in_specs = [pl.BlockSpec((1, 1, cg, d), q_index)]
     args = [_fold_heads(q, b, c, hkv, group)]
     if has_rope:
@@ -181,13 +223,22 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
         args.append(_fold_heads(q2, b, c, hkv, group))
     in_specs.append(pl.BlockSpec((1, bs, 1, d), page_index))
     args.append(k_pages)
+    if quantized:
+        in_specs.append(scale_spec)
+        args.append(k_scales)
     if has_rope:
         in_specs.append(pl.BlockSpec((1, bs, 1, k2_pages.shape[-1]),
                                      page_index))
         args.append(k2_pages)
+        if quantized:
+            in_specs.append(scale_spec)
+            args.append(k2_scales)
     if not shared_kv:
         in_specs.append(pl.BlockSpec((1, bs, 1, dv), page_index))
         args.append(v_pages)
+        if quantized:
+            in_specs.append(scale_spec)
+            args.append(v_scales)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -204,7 +255,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, positions, *,
     out = pl.pallas_call(
         functools.partial(_kernel, sm_scale=sm_scale, block_size=bs,
                           group=group, has_rope=has_rope,
-                          shared_kv=shared_kv),
+                          shared_kv=shared_kv, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, cg, dv),
                                        out_dtype or q.dtype),

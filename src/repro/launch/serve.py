@@ -24,6 +24,14 @@ is attended by the fused block-table Pallas kernel by default;
   PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
       --slots 8 --block-size 8 --num-blocks 16 --paged-attn fused
 
+Quantized KV pages (``--kv-quant int8``): the paged arena stores int8
+codes plus per-(position, kv-head) fp16 scales and the fused kernel
+dequantizes in-block during the table walk, roughly halving both the
+per-token KV stream and arena residency (see docs/kernel-contracts.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 12 \
+      --slots 8 --block-size 8 --kv-quant int8
+
 Speculative decoding (propose k tokens, verify them in ONE unified step,
 amortize the per-step weight stream by the accept length — §V.A's
 transfer bottleneck attacked at the system level). ``--spec ngram`` is
@@ -146,7 +154,7 @@ def run_stream(cfg, model, params, args) -> None:
         or None, paged_attn=args.paged_attn or "fused",
         spec=args.spec, spec_k=args.spec_k or 4,
         spec_draft_model=draft_model, spec_draft_params=draft_params,
-        prefix_cache=args.prefix_cache,
+        prefix_cache=args.prefix_cache, kv_quant=args.kv_quant,
         host_sampling=args.host_sampling)
 
     report = engine.serve(reqs, seed=args.seed)
@@ -156,7 +164,9 @@ def run_stream(cfg, model, params, args) -> None:
     if engine.paged:
         arena_desc += (f" paged[{engine.arena.num_blocks}x"
                        f"{engine.arena.block_size} "
-                       f"attn={engine.paged_attn}]")
+                       f"attn={engine.paged_attn}"
+                       + (f" kv={engine.kv_quant}"
+                          if engine.kv_quant != "none" else "") + "]")
     print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
           f"({args.arrival}) {arena_desc} "
           f"prefill=chunked[{engine.chunk_size}] gen={args.gen}")
@@ -250,6 +260,26 @@ def validate_args(ap, args) -> None:
                      f"family ({args.arch}): prompt KV depends on "
                      "per-request encoder/vision conditioning, so equal "
                      "token prefixes do not imply equal pages")
+    if args.kv_quant != "none":
+        if not args.block_size:
+            ap.error("--kv-quant requires the paged arena (--block-size): "
+                     "quantize-on-insert and in-kernel dequant live on "
+                     "the paged block-table path; the contiguous slot "
+                     "arena has no quantized read path")
+        if args.mode != "stream":
+            ap.error("--kv-quant requires --mode stream (the lockstep "
+                     "batch path builds its own contiguous-arena engines)")
+        fam = get_config(args.arch).family
+        if fam in ("ssm", "hybrid"):
+            ap.error(f"--kv-quant is unsupported for the {fam!r} family "
+                     f"({args.arch}): recurrent state is a running "
+                     "summary, not per-position KV pages — requantizing "
+                     "it every step would compound rounding error")
+        if fam == "encdec":
+            ap.error(f"--kv-quant is unsupported for the {fam!r} family "
+                     f"({args.arch}): cross-attention KV is written by "
+                     "the one-time encoder pass, which bypasses the "
+                     "quantize-on-insert path")
     if args.shared_prefix < 0:
         ap.error("--shared-prefix must be >= 0")
     if args.paged_attn and not args.block_size:
@@ -335,6 +365,13 @@ def main() -> None:
     ap.add_argument("--spec-draft-model", default=None,
                     help="draft model arch for --spec draft (e.g. "
                          "qwen3-0.6b drafting for qwen3-8b)")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8"],
+                    help="paged KV page storage: int8 codes + per-"
+                         "(position, kv-head) fp16 scales, dequantized "
+                         "inside the fused kernel's block-table walk "
+                         "(~2x lower KV stream and arena residency); "
+                         "requires --block-size")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted copy-on-write prefix sharing: map "
                          "cached prompt prefixes (full token blocks) onto "

@@ -82,15 +82,26 @@ class ModelAPI:
 
     def paged_decode_specs(self, num_slots: int, num_blocks: int,
                            block_size: int, max_seq: int,
-                           dtype=jnp.bfloat16) -> Dict:
+                           dtype=jnp.bfloat16,
+                           kv_quant: str = "none") -> Dict:
         """Entry ShapeDtypeStructs for the paged serving decode step:
         ``slot_decode_specs`` plus the per-slot block tables, over
         (num_blocks + 1, block_size) page storage (the +1 is the arena's
-        null block)."""
-        shapes, _ = self.paged_cache_shapes(num_slots, num_blocks + 1,
-                                            block_size)
-        to_spec = lambda x: jax.ShapeDtypeStruct(x, dtype) \
-            if isinstance(x, tuple) else x
+        null block). ``kv_quant="int8"`` mirrors the quantized arena
+        layout: each paged leaf becomes ``{"q": int8 pages, "s": float16
+        scale pages}`` (scale shape = page shape minus the feature
+        axis), matching ``PagedKVArena.page_layout``."""
+        shapes, paged = self.paged_cache_shapes(num_slots, num_blocks + 1,
+                                                block_size)
+        is_shape = lambda x: isinstance(x, tuple)
+
+        def to_spec(x, is_paged):
+            if not is_shape(x):
+                return x
+            if is_paged and kv_quant == "int8":
+                return {"q": jax.ShapeDtypeStruct(x, jnp.int8),
+                        "s": jax.ShapeDtypeStruct(x[:-1], jnp.float16)}
+            return jax.ShapeDtypeStruct(x, dtype)
         max_blocks = -(-max_seq // block_size)
         return {
             "token": jax.ShapeDtypeStruct((num_slots, 1), jnp.int32),
@@ -98,14 +109,15 @@ class ModelAPI:
             "active": jax.ShapeDtypeStruct((num_slots,), jnp.bool_),
             "block_tables": jax.ShapeDtypeStruct((num_slots, max_blocks),
                                                  jnp.int32),
-            "cache": jax.tree.map(to_spec, shapes,
-                                  is_leaf=lambda x: isinstance(x, tuple)),
+            "cache": jax.tree.map(to_spec, shapes, paged,
+                                  is_leaf=is_shape),
         }
 
     def chunked_step_specs(self, num_slots: int, chunk: int, max_seq: int,
                            dtype=jnp.bfloat16,
                            block_size: Optional[int] = None,
-                           num_blocks: Optional[int] = None) -> Dict:
+                           num_blocks: Optional[int] = None,
+                           kv_quant: str = "none") -> Dict:
         """Entry ShapeDtypeStructs for the *unified* chunked-prefill step:
         ONE traced shape (num_slots, chunk) covers prompt ingestion AND
         generation — per-slot base positions + valid-entry counts (the
@@ -125,7 +137,8 @@ class ModelAPI:
         }
         if block_size is not None:
             paged = self.paged_decode_specs(num_slots, num_blocks,
-                                            block_size, max_seq, dtype)
+                                            block_size, max_seq, dtype,
+                                            kv_quant=kv_quant)
             specs["block_tables"] = paged["block_tables"]
             specs["cache"] = paged["cache"]
         else:

@@ -32,6 +32,15 @@ through the table one of two ways (``paged_impl``):
   slot's dense (B, max_blocks*block_size, ...) logical view every step —
   O(arena) traffic, kept as the fallback and the differential oracle the
   fused kernel is tested against.
+
+Quantized paged cache (arena built with ``kv_quant="int8"``): each paged
+leaf is a dict ``{"q": int8 code pages, "s": float16 scale pages}``
+(scale per (position, kv-head), quantized over the feature axis at
+insert time — see ``quantize_kv``). The decode paths detect the dict
+structurally, quantize on insert, and either hand code+scale pages to
+the fused kernel (which dequantizes in the block walk) or dequantize the
+dense gathered view on the ref path. Contiguous caches are never
+quantized (the serving engine gates ``kv_quant`` on the paged arena).
 """
 from __future__ import annotations
 
@@ -288,6 +297,60 @@ def _insert_kv(cache_arr: jnp.ndarray, new: jnp.ndarray,
 
 
 # ----------------------------------------------------------------------
+# Quantized KV pages (blocked int8 + per-(position, kv-head) scales)
+# ----------------------------------------------------------------------
+# Scale storage dtype. float16 (not f32) is load-bearing for the byte
+# accounting: the quantized KV stream is (D + 2)/(2D) of bf16 per
+# stored feature row, which clears the bench gate even at the reduced
+# head_dim of 32 (0.531x); f32 scales would not (0.563x).
+KV_QUANT_SCALE_DTYPE = jnp.float16
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization over the trailing feature axis:
+    ``x`` (..., D) -> (codes int8 (..., D), scales float16 (...,)).
+    Scale is amax/127 per feature row (one row per (token, kv-head) for
+    GQA K/V; per token for MLA latents) — the same absmax scheme as the
+    q8_0 weight format, at insert-time granularity so every cache
+    position quantizes independently (rollback can zero single
+    positions without touching a shared block scale). An all-zero row
+    maps to (codes 0, scale 0), which dequantizes to exactly zero —
+    never-written, rolled-back and null pages stay bit-identical."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0)[..., None])
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale.astype(KV_QUANT_SCALE_DTYPE)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``quantize_kv``: f32 ``codes * scale`` — the same
+    arithmetic the fused kernel performs in VMEM during the block walk,
+    exposed for the ref (dense-gather) path and the differential tests."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def _paged_insert_quant(leaf: Dict, new: jnp.ndarray, position,
+                        block_tables, lengths) -> Dict:
+    """Quantize-on-insert into a quantized paged leaf ``{"q": int8
+    pages, "s": scale pages}`` (see ``PagedKVArena.page_layout``). Codes
+    and scales scatter through the same table walk, so the write-drop /
+    null-block routing contracts apply to both identically."""
+    q, s = quantize_kv(new)
+    return {"q": paged_insert_token(leaf["q"], q, position, block_tables,
+                                    lengths),
+            "s": paged_insert_token(leaf["s"], s, position, block_tables,
+                                    lengths)}
+
+
+def _paged_view_dequant(leaf: Dict, block_tables) -> jnp.ndarray:
+    """Dense-gather oracle over a quantized paged leaf: gather codes and
+    scales through the table, dequantize to the f32 logical view."""
+    return dequantize_kv(paged_view(leaf["q"], block_tables),
+                         paged_view(leaf["s"], block_tables))
+
+
+# ----------------------------------------------------------------------
 # Paged cache plumbing (block-table gather/scatter inside the jitted step)
 # ----------------------------------------------------------------------
 def paged_insert_token(pages: jnp.ndarray, new: jnp.ndarray, position,
@@ -364,23 +427,41 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
         kc, vc = cache["k"], cache["v"]
         kv_len = None
     elif block_tables is not None:
-        kp = paged_insert_token(cache["k"], k, position, block_tables,
-                                lengths)
-        vp = paged_insert_token(cache["v"], v, position, block_tables,
-                                lengths)
+        kv_quant = isinstance(cache["k"], dict)   # {"q","s"} int8 leaves
+        if kv_quant:
+            kp = _paged_insert_quant(cache["k"], k, position, block_tables,
+                                     lengths)
+            vp = _paged_insert_quant(cache["v"], v, position, block_tables,
+                                     lengths)
+        else:
+            kp = paged_insert_token(cache["k"], k, position, block_tables,
+                                    lengths)
+            vp = paged_insert_token(cache["v"], v, position, block_tables,
+                                    lengths)
         cache = {"k": kp, "v": vp}
         if paged_impl == "fused":
             base = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
-            o = paged_decode_attention(q, kp, vp, block_tables, base,
-                                       sm_scale=hd ** -0.5,
-                                       lengths=lengths,
-                                       interpret=interpret)
+            if kv_quant:
+                o = paged_decode_attention(
+                    q, kp["q"], vp["q"], block_tables, base,
+                    sm_scale=hd ** -0.5, k_scales=kp["s"],
+                    v_scales=vp["s"], lengths=lengths,
+                    interpret=interpret)
+            else:
+                o = paged_decode_attention(q, kp, vp, block_tables, base,
+                                           sm_scale=hd ** -0.5,
+                                           lengths=lengths,
+                                           interpret=interpret)
             o = o.reshape(b, cw, cfg.num_heads * hd)
             out = layers.linear_apply(p["o"], o, fmt, impl=impl,
                                       interpret=interpret)
             return out, cache
-        kc = paged_view(kp, block_tables)
-        vc = paged_view(vp, block_tables)
+        if kv_quant:
+            kc = _paged_view_dequant(kp, block_tables).astype(q.dtype)
+            vc = _paged_view_dequant(vp, block_tables).astype(q.dtype)
+        else:
+            kc = paged_view(kp, block_tables)
+            vc = paged_view(vp, block_tables)
         kv_len = pos_mat + 1                # per-query causal depth
     else:
         kc = _insert_kv(cache["k"], k, position, lengths)
@@ -501,15 +582,26 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv(
         p, cfg, x, pos_mat, fmt, impl, interpret)
     fused = block_tables is not None and paged_impl == "fused"
+    kv_quant = block_tables is not None and isinstance(cache["ckv"], dict)
     if block_tables is not None:
-        ckv_p = paged_insert_token(cache["ckv"], ckv_new, position,
-                                   block_tables, lengths)
-        krope_p = paged_insert_token(cache["krope"], krope_new, position,
-                                     block_tables, lengths)
+        if kv_quant:
+            ckv_p = _paged_insert_quant(cache["ckv"], ckv_new, position,
+                                        block_tables, lengths)
+            krope_p = _paged_insert_quant(cache["krope"], krope_new,
+                                          position, block_tables, lengths)
+        else:
+            ckv_p = paged_insert_token(cache["ckv"], ckv_new, position,
+                                       block_tables, lengths)
+            krope_p = paged_insert_token(cache["krope"], krope_new,
+                                         position, block_tables, lengths)
         cache = {"ckv": ckv_p, "krope": krope_p}
         if not fused:
-            ckv = paged_view(ckv_p, block_tables)
-            krope = paged_view(krope_p, block_tables)
+            if kv_quant:
+                ckv = _paged_view_dequant(ckv_p, block_tables)
+                krope = _paged_view_dequant(krope_p, block_tables)
+            else:
+                ckv = paged_view(ckv_p, block_tables)
+                krope = paged_view(krope_p, block_tables)
     else:
         ckv = _insert_kv(cache["ckv"], ckv_new, position, lengths)
         krope = _insert_kv(cache["krope"], krope_new, position, lengths)
@@ -526,12 +618,24 @@ def mla_decode(p, cfg, x, position, cache, *, fmt="none", impl="ref",
     sm = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     if fused:
         base = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
-        ctx = paged_decode_attention(
-            q_eff, ckv_p[:, :, None, :], None,       # ckv doubles as V
-            block_tables, base, sm_scale=sm,
-            q2=q_rope.astype(jnp.float32),
-            k2_pages=krope_p[:, :, None, :], lengths=lengths,
-            out_dtype=jnp.float32, interpret=interpret)  # (b, q, h, rank)
+        if kv_quant:
+            # Quantized compressed latents: int8 code pages + (NP, bs)
+            # scale pages, lifted to the kernel's Hkv == 1 layout.
+            ctx = paged_decode_attention(
+                q_eff, ckv_p["q"][:, :, None, :], None,  # ckv doubles as V
+                block_tables, base, sm_scale=sm,
+                q2=q_rope.astype(jnp.float32),
+                k2_pages=krope_p["q"][:, :, None, :],
+                k_scales=ckv_p["s"][:, :, None],
+                k2_scales=krope_p["s"][:, :, None], lengths=lengths,
+                out_dtype=jnp.float32, interpret=interpret)
+        else:
+            ctx = paged_decode_attention(
+                q_eff, ckv_p[:, :, None, :], None,       # ckv doubles as V
+                block_tables, base, sm_scale=sm,
+                q2=q_rope.astype(jnp.float32),
+                k2_pages=krope_p[:, :, None, :], lengths=lengths,
+                out_dtype=jnp.float32, interpret=interpret)  # (b,q,h,rank)
         o = jnp.einsum("bqhr,hvr->bqhv", ctx, wv)
         o = o.reshape(b, cw, h * m.v_head_dim).astype(x.dtype)
         out = layers.linear_apply(p["o"], o, fmt, impl=impl,

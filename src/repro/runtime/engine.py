@@ -70,7 +70,7 @@ import numpy as np
 from repro.core import convert
 from repro.models.api import ModelAPI
 from repro.runtime import sampling, speculative
-from repro.runtime.kvcache import KVArena, PagedKVArena
+from repro.runtime.kvcache import KV_QUANT_MODES, KVArena, PagedKVArena
 from repro.runtime.request import Request, SamplingParams, SeqState, Sequence
 from repro.runtime.scheduler import Scheduler, SchedulerStats
 from repro.runtime.transfers import TransferLedger, TransferReport
@@ -78,6 +78,9 @@ from repro.runtime.transfers import TransferLedger, TransferReport
 
 @dataclasses.dataclass
 class GenStats:
+    """Aggregate counters for one generation/serve run (timing, token
+    counts, byte accounting, speculative and prefix-sharing tallies)."""
+
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_in: int = 0              # prompt tokens per sequence
@@ -133,6 +136,7 @@ class GenStats:
 
     @property
     def e2e_s(self) -> float:
+        """Total wall time (prefill + decode phases)."""
         return self.prefill_s + self.decode_s
 
     @property
@@ -144,12 +148,16 @@ class GenStats:
 
     @property
     def prefill_tok_per_s(self) -> float:
+        """Prefill-phase throughput (prompt tokens per second)."""
         n = self.prefill_tokens or self.tokens_in
         return n / self.prefill_s if self.prefill_s else 0.0
 
 
 @dataclasses.dataclass
 class ServeReport:
+    """Everything a finished serve run reports: aggregate stats, the
+    per-sequence records, scheduler stats and the compile count."""
+
     stats: GenStats                 # stats.transfers: frozen ledger view
     sequences: List[Sequence]       # finished, submission order
     sched: SchedulerStats
@@ -158,9 +166,11 @@ class ServeReport:
 
     @property
     def transfers(self) -> TransferReport:
+        """Frozen transfer-ledger view (see docs/transfer-ledger.md)."""
         return self.stats.transfers
 
     def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[int, float]:
+        """Request-latency percentiles (seconds) over finished sequences."""
         lats = [s.latency_s for s in self.sequences if s.latency_s is not None]
         if not lats:
             return {q: 0.0 for q in qs}
@@ -168,6 +178,7 @@ class ServeReport:
 
     @property
     def throughput_tok_s(self) -> float:
+        """Generated tokens per second of total wall time."""
         return self.stats.decode_tokens / self.stats.e2e_s \
             if self.stats.e2e_s else 0.0
 
@@ -188,6 +199,7 @@ class ServingEngine:
                  spec_draft_model: Optional[ModelAPI] = None,
                  spec_draft_params=None,
                  prefix_cache: bool = False,
+                 kv_quant: str = "none",
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
                  cache_dtype=jnp.bfloat16):
@@ -240,9 +252,33 @@ class ServingEngine:
                     "per-request conditioning (encoder frames / vision "
                     "embeddings), so equal token chains do not imply "
                     "equal pages")
+        if kv_quant not in KV_QUANT_MODES:
+            raise ValueError(f"unknown kv_quant mode {kv_quant!r} "
+                             f"(choose from {KV_QUANT_MODES})")
+        if kv_quant != "none":
+            if block_size is None:
+                raise ValueError(
+                    "kv_quant requires the paged arena (set block_size): "
+                    "quantize-on-insert and in-kernel dequant live on the "
+                    "paged block-table path; the contiguous slot arena "
+                    "has no quantized read path")
+            if model.cfg.family in speculative.RECURRENT_FAMILIES:
+                raise ValueError(
+                    f"kv_quant is unsupported for the "
+                    f"{model.cfg.family!r} family: recurrent state is a "
+                    "running summary, not per-position KV pages — "
+                    "requantizing it every step would compound rounding "
+                    "error across the whole sequence")
+            if model.cfg.family == "encdec":
+                raise ValueError(
+                    "kv_quant is unsupported for the 'encdec' family: "
+                    "cross-attention KV is written by the one-time "
+                    "encoder pass (write_prefill), which bypasses the "
+                    "quantize-on-insert path")
         self.model = model
         self.params = params
         self.quant = quant
+        self.kv_quant = kv_quant
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.impl = impl
@@ -275,7 +311,8 @@ class ServingEngine:
             if block_size else 0
         self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
-                               host_sampling=host_sampling)
+                               host_sampling=host_sampling,
+                               kv_quant=kv_quant)
         self._vlm = model.cfg.family == "vlm"
         self._fresh_arena_sched()
         self._step_compiles = 0
@@ -341,7 +378,8 @@ class ServingEngine:
                                       block_size=self._block_size,
                                       num_blocks=self._num_blocks,
                                       dtype=self.cache_dtype,
-                                      prefix_cache=self.prefix_cache)
+                                      prefix_cache=self.prefix_cache,
+                                      kv_quant=self.kv_quant)
         else:
             self.arena = KVArena(self.model, self.num_slots, self.max_seq,
                                  dtype=self.cache_dtype)

@@ -42,6 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import ModelAPI
+from repro.models.attention import KV_QUANT_SCALE_DTYPE
+
+#: Supported paged-KV storage quantization modes.
+KV_QUANT_MODES = ("none", "int8")
 
 
 def allocate(model: ModelAPI, batch: int, max_seq: int,
@@ -176,10 +180,12 @@ class BlockAllocator:
     # -- queries ---------------------------------------------------------
     @property
     def free_blocks(self) -> int:
+        """Blocks currently on the free list (refcount 0)."""
         return len(self._free)
 
     @property
     def used_blocks(self) -> int:
+        """Blocks held by at least one reference."""
         return self.num_blocks - len(self._free)
 
     def blocks_for(self, tokens: int) -> int:
@@ -276,6 +282,7 @@ class PrefixCache:
         return out
 
     def is_cached(self, block: int) -> bool:
+        """Whether ``block`` currently backs a published cache entry."""
         return block in self._by_block
 
     def register(self, key: bytes, block: int) -> bool:
@@ -338,10 +345,12 @@ class KVArena:
     # -- slot lifecycle -------------------------------------------------
     @property
     def free_slots(self) -> int:
+        """Slots available for admission."""
         return len(self._free)
 
     @property
     def used_slots(self) -> int:
+        """Slots hosting a live sequence."""
         return self.num_slots - len(self._free)
 
     def alloc(self) -> Optional[int]:
@@ -349,6 +358,8 @@ class KVArena:
         return self._free.pop()
 
     def free(self, slot: int) -> None:
+        """Return ``slot`` to the free list (its storage is left stale —
+        masked by kv_len and rewritten before reuse)."""
         self._free.push(slot)
 
     # -- storage --------------------------------------------------------
@@ -370,6 +381,7 @@ class KVArena:
         self.buffers = jax.tree.unflatten(treedef, new)
 
     def nbytes(self) -> int:
+        """Total device bytes of the arena's cache storage."""
         return cache_nbytes(self.buffers)
 
     def slot_bytes(self) -> float:
@@ -548,13 +560,28 @@ class PagedKVArena:
     write can land on it — so the per-step K/V scatter through the table
     remains collision-free by invariant: every position a step writes
     maps to an exclusively-owned (refcount-1) block.
+
+    With ``kv_quant="int8"`` every paged leaf stores blocked int8 codes
+    plus a float16 scale page (per-position, per-kv-head absmax scale,
+    computed at insert time inside the jitted step); the fused kernel
+    dequantizes during the block walk. Block/slot lifecycle, rollback,
+    CoW and the prefix cache are representation-agnostic — they move or
+    zero code and scale pages through the same leaf-wise jitted helpers.
     """
 
     def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
                  block_size: int, num_blocks: Optional[int] = None,
-                 dtype=jnp.bfloat16, prefix_cache: bool = False):
+                 dtype=jnp.bfloat16, prefix_cache: bool = False,
+                 kv_quant: str = "none"):
+        """Build the paged arena. See the class docstring for the model;
+        ``kv_quant="int8"`` stores paged leaves as blocked int8 code
+        pages plus float16 scale pages (quantize-on-insert, in-kernel
+        dequant — see ``page_layout``)."""
         if not (1 <= block_size <= max_seq):
             raise ValueError(f"block_size {block_size} outside [1, {max_seq}]")
+        if kv_quant not in KV_QUANT_MODES:
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             f"(choose from {KV_QUANT_MODES})")
         self.model = model
         self.num_slots = num_slots
         self.max_seq = max_seq
@@ -565,6 +592,7 @@ class PagedKVArena:
         self.num_blocks = num_blocks
         self.null_block = num_blocks                  # last physical page
         self.dtype = dtype
+        self.kv_quant = kv_quant
 
         shapes, paged = model.paged_cache_shapes(num_slots, num_blocks + 1,
                                                  block_size)
@@ -576,6 +604,33 @@ class PagedKVArena:
             model, num_slots, max_seq, dtype,
             tuple(not f for f in self._paged_flags))
         is_shape = lambda x: isinstance(x, tuple)
+        if kv_quant == "int8":
+            if not any(self._paged_flags):
+                raise ValueError(
+                    "kv_quant requires paged (seq-indexed) KV leaves; "
+                    "constant-size recurrent state has no per-position "
+                    "rows to quantize independently")
+            # Every paged leaf splits into {"q": int8 code pages, "s":
+            # float16 scale pages} (scale shape = page shape minus the
+            # quantized feature axis). The dict expands each paged leaf
+            # into two flattened leaves ("q" sorts before "s"), both
+            # paged, so every generic jitted helper — _paged_insert,
+            # _copy_pages, _zero_paged_positions — applies to codes and
+            # scales identically with zero special-casing.
+            shapes = jax.tree.map(
+                lambda s, f: {"q": s, "s": s[:-1]} if f else s,
+                shapes, paged, is_leaf=is_shape)
+            flags, dts = [], []
+            for f, dt in zip(self._paged_flags, self._leaf_dtypes):
+                if f:
+                    flags += [True, True]
+                    dts += [jnp.dtype(jnp.int8),
+                            jnp.dtype(KV_QUANT_SCALE_DTYPE)]
+                else:
+                    flags.append(f)
+                    dts.append(dt)
+            self._paged_flags = tuple(flags)
+            self._leaf_dtypes = tuple(dts)
         leaves, treedef = jax.tree.flatten(shapes, is_leaf=is_shape)
         self.buffers = treedef.unflatten(
             [jnp.zeros(s, dt) for s, dt in zip(leaves, self._leaf_dtypes)])
@@ -621,19 +676,31 @@ class PagedKVArena:
           ``null_block``. Null-page contents are finite garbage (zeros,
           or stale inactive-slot writes) and always sit past ``kv_len``,
           so the kernel masks them before the softmax — no
-          data-dependent guard needed inside the jitted step.
+          data-dependent guard needed inside the jitted step;
+        * ``kv_quant == "int8"``: each paged leaf is a dict ``{"q", "s"}``
+          — int8 code pages in the original page shape plus float16
+          scale pages shaped like the pages minus the quantized feature
+          axis (one scale per (in-page position, kv-head)). Codes and
+          scales share the block table; the fused kernel dequantizes
+          during the walk and zeroed pages dequantize to exactly zero,
+          so the null/rollback/CoW contracts above apply unchanged.
+
+        See ``docs/kernel-contracts.md`` for the full written contract.
         """
         return {"block_size": self.block_size,
                 "max_blocks": self.max_blocks,
                 "num_pages": self.num_blocks + 1,
-                "null_block": self.null_block}
+                "null_block": self.null_block,
+                "kv_quant": self.kv_quant}
 
     @property
     def free_slots(self) -> int:
+        """Slots available for admission."""
         return len(self._free_slots)
 
     @property
     def used_slots(self) -> int:
+        """Slots hosting a live sequence."""
         return self.num_slots - len(self._free_slots)
 
     def blocks_needed(self, tokens: int) -> int:
@@ -644,6 +711,7 @@ class PagedKVArena:
         return self.allocator.blocks_for(tokens)
 
     def slot_blocks(self, slot: int) -> List[int]:
+        """Copy of ``slot``'s physical block list (logical order)."""
         return list(self._slot_blocks[slot])
 
     def device_tables(self) -> Tuple[jnp.ndarray, int]:
@@ -814,6 +882,8 @@ class PagedKVArena:
         return len(fresh)
 
     def free_slot(self, slot: int) -> None:
+        """Release ``slot``: decref its blocks back to the allocator,
+        reset its table row to the null sentinel, free the slot."""
         self.allocator.free(self._slot_blocks[slot])
         self._slot_blocks[slot] = []
         self.tables[slot] = self.null_block
@@ -823,6 +893,7 @@ class PagedKVArena:
     # ``KVArena``-compatible aliases so the scheduler's retire path is
     # arena-agnostic.
     def free(self, slot: int) -> None:
+        """Alias for ``free_slot`` (the slot arena's retire name)."""
         self.free_slot(slot)
 
     def reset_slot(self, slot: int) -> None:
@@ -848,6 +919,12 @@ class PagedKVArena:
         width is always ``blocks_for(P)`` (real blocks first, null-block
         padding after), so the jit trace count tracks the prefill-cache
         shapes, not per-prompt reservation sizes."""
+        if self.kv_quant != "none" and self.has_paged:
+            raise NotImplementedError(
+                "write_prefill cannot scatter an unquantized prefill "
+                "cache into int8 pages; quantized serving feeds prompts "
+                "through the chunked step (quantize-on-insert), and the "
+                "engine refuses the families that need this path")
         leaves = jax.tree.leaves(prefill_cache)
         phys_ids = self._slot_blocks[slot][:1]
         if self.has_paged:
@@ -864,6 +941,8 @@ class PagedKVArena:
 
     # -- byte accounting --------------------------------------------------
     def nbytes(self) -> int:
+        """Total device bytes of the arena's cache storage (precomputed
+        — shape-static)."""
         return self._nbytes
 
     def block_bytes(self) -> float:
@@ -940,4 +1019,5 @@ class PagedKVArena:
 
 
 def cache_nbytes(cache) -> int:
+    """Total bytes across all leaves of a cache pytree."""
     return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)))

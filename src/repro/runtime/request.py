@@ -29,6 +29,8 @@ import numpy as np
 
 
 class SeqState(enum.Enum):
+    """Sequence lifecycle states (see the module docstring's diagram)."""
+
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
@@ -37,6 +39,8 @@ class SeqState(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
+    """Per-request sampling configuration (greedy by default)."""
+
     temperature: float = 0.0        # 0 -> greedy
     top_k: int = 0                  # 0 -> no top-k filter
     top_p: float = 1.0              # 1 -> no nucleus filter
@@ -45,6 +49,9 @@ class SamplingParams:
 
 @dataclasses.dataclass
 class Request:
+    """A client submission: prompt, sampling params, generation budget
+    and (for stream replay) an arrival offset."""
+
     rid: int
     tokens: np.ndarray              # (L,) int prompt, L >= 2
     max_new_tokens: int
@@ -60,6 +67,7 @@ class Request:
 
     @property
     def prompt_len(self) -> int:
+        """Number of prompt tokens."""
         return int(len(self.tokens))
 
 
@@ -82,6 +90,7 @@ class Sequence:
 
     @property
     def rid(self) -> int:
+        """The underlying request's id."""
         return self.req.rid
 
     def context_tokens(self) -> np.ndarray:
@@ -96,13 +105,16 @@ class Sequence:
 
     @property
     def done(self) -> bool:
+        """Whether the sequence has finished generating."""
         return self.state is SeqState.DONE
 
     @property
     def tokens_out(self) -> int:
+        """Generated tokens committed so far."""
         return len(self.generated)
 
     def admit(self, slot: int, now: float) -> None:
+        """QUEUED -> PREFILL: bind ``slot`` and reset feed progress."""
         assert self.state is SeqState.QUEUED
         self.state = SeqState.PREFILL
         self.slot = slot
@@ -128,6 +140,7 @@ class Sequence:
     # -- chunked prompt streaming ----------------------------------------
     @property
     def prompt_remaining(self) -> int:
+        """Prompt tokens not yet streamed through the unified step."""
         return self.req.prompt_len - self.fed
 
     def next_feed(self, chunk: int) -> int:
@@ -150,6 +163,8 @@ class Sequence:
         return done
 
     def start_decode(self) -> None:
+        """PREFILL -> DECODE (the chunk that consumed the prompt also
+        sampled the first token; ``record_token`` logs it)."""
         assert self.state is SeqState.PREFILL
         self.state = SeqState.DECODE
 
@@ -168,6 +183,7 @@ class Sequence:
         self.preemptions += 1
 
     def record_token(self, token: int, now: float) -> None:
+        """Commit one generated token; flips to DONE at the budget."""
         assert self.state is SeqState.DECODE
         if self.t_first_token is None:
             self.t_first_token = now
@@ -196,6 +212,7 @@ class Sequence:
 
     @property
     def latency_s(self) -> Optional[float]:
+        """End-to-end request latency, from arrival to final token."""
         if self.t_done is None:
             return None
         return self.t_done - self._t_arrival_eff

@@ -42,6 +42,8 @@ from repro.runtime.request import Request, SeqState, Sequence
 
 @dataclasses.dataclass
 class SchedulerStats:
+    """Admission/occupancy counters for one serve run."""
+
     admitted: int = 0
     completed: int = 0
     preemptions: int = 0            # paged arena: preempt-to-queue events
@@ -56,10 +58,16 @@ class SchedulerStats:
 
     @property
     def mean_occupancy(self) -> float:
+        """Mean active-slot count per executed step."""
         return self.occupancy_sum / self.steps if self.steps else 0.0
 
 
 class Scheduler:
+    """FCFS continuous-batching scheduler: request stream in, per-step
+    admission into arena slots, preempt-to-queue on arena exhaustion.
+    Arena-agnostic — slot/block policy lives behind the ``admit_fn`` /
+    ``free_fn`` callables the engine supplies."""
+
     def __init__(self, num_slots: int, max_seq: int):
         self.num_slots = num_slots
         self.max_seq = max_seq
@@ -73,6 +81,8 @@ class Scheduler:
 
     # -- submission ------------------------------------------------------
     def submit(self, req: Request) -> Sequence:
+        """Wrap ``req`` in a Sequence and stage it on the pending queue
+        (rejects budgets that can never fit the arena)."""
         budget = req.prompt_len + req.max_new_tokens
         if budget > self.max_seq:
             raise ValueError(
@@ -165,6 +175,7 @@ class Scheduler:
 
     # -- step bookkeeping -------------------------------------------------
     def record_step(self) -> None:
+        """Account one executed unified step (occupancy tallies)."""
         self.stats.steps += 1
         self.stats.occupancy_sum += len(self.active)
         self.stats.max_occupancy = max(self.stats.max_occupancy,
@@ -204,7 +215,9 @@ class Scheduler:
     # -- state queries ----------------------------------------------------
     @property
     def has_work(self) -> bool:
+        """Whether any sequence is pending, queued or active."""
         return bool(self.pending or self.queue or self.active)
 
     def next_arrival(self) -> Optional[float]:
+        """Arrival time of the next not-yet-arrived request, if any."""
         return self.pending[0].req.arrival_s if self.pending else None

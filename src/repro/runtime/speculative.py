@@ -78,6 +78,7 @@ class NGramProposer:
 
     def propose(self, seqs: Dict[int, Sequence],
                 grants: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """Per-slot proposals (possibly empty) for the granted depths."""
         out = {}
         for slot, k in grants.items():
             out[slot] = self._propose_one(seqs[slot].context_tokens(), k)
@@ -117,15 +118,18 @@ class SpecController:
     ema: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     def reset(self, slot: int) -> None:
+        """Forget ``slot``'s history (slot reuse by a new sequence)."""
         self.ema.pop(slot, None)
 
     def depth(self, slot: int) -> int:
+        """Proposal depth to request for ``slot`` this step."""
         if not self.adaptive:
             return self.k_max
         e = self.ema.get(slot, 1.0)
         return max(1, min(self.k_max, round(e * self.k_max)))
 
     def update(self, slot: int, proposed: int, accepted: int) -> None:
+        """Fold one verification outcome into ``slot``'s accept EMA."""
         if proposed <= 0:
             return
         rate = accepted / proposed
@@ -279,6 +283,7 @@ def make_proposer(mode: str, *, draft_model=None, draft_params=None,
                   num_slots: int = 0, max_seq: int = 0, chunk: int = 0,
                   quant: str = "none", impl: str = "ref",
                   cache_dtype=jnp.bfloat16):
+    """Build the proposer for ``mode`` ("ngram" or "draft")."""
     if mode == "ngram":
         return NGramProposer()
     if mode == "draft":

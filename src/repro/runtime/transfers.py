@@ -18,7 +18,10 @@ of a generation to a (phase, category, direction) cell:
                        stream (attn_qk / attn_pv "weights"), split out so
                        bytes/token decomposes into the shareable weight
                        stream vs the per-token KV traffic (live chunked
-                       charging only)
+                       charging only). Under ``kv_quant="int8"`` the
+                       stream is scaled by ``kv_quant_stream_scale`` —
+                       int8 codes plus one fp16 scale per (position,
+                       kv-head) instead of 2-byte elements
              acts    — activation staging for offloaded kernels, h2d
              outs    — kernel result drain, d2h
              sampled — sampled token ids, d2h (fused device sampling), or
@@ -76,18 +79,51 @@ DEV = "dev"
 PHASES = ("prefill", "decode")
 
 
+def kv_quant_stream_scale(cfg: ModelConfig, kv_quant: str) -> float:
+    """Bytes ratio of the quantized KV stream to the bf16 stream.
+
+    The KernelCall tables charge attention KV at fp16 width (2 bytes per
+    element). ``kv_quant="int8"`` stores each element as a 1-byte code
+    plus one fp16 scale per (position, kv-head) — i.e. per trailing
+    feature axis of the paged leaf. Per position and kv-head:
+
+    * GQA: ``(head_dim + 2) / (2 * head_dim)`` — head_dim codes + one
+      2-byte scale vs head_dim 2-byte elements (K and V scale alike, so
+      the factor applies to the whole stream).
+    * absorbed MLA: the per-position stream is the compressed KV
+      (``kv_lora_rank`` elements) plus the decoupled-RoPE key
+      (``qk_rope_head_dim`` elements), each with its own scale:
+      ``((rank + 2) + (rope + 2)) / (2 * (rank + rope))``.
+
+    Returns 1.0 for ``kv_quant="none"``. See ``docs/transfer-ledger.md``.
+    """
+    if kv_quant == "none":
+        return 1.0
+    if kv_quant != "int8":
+        raise ValueError(f"unknown kv_quant mode {kv_quant!r}")
+    if cfg.mla is not None:
+        rank, rope = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+        return ((rank + 2) + (rope + 2)) / (2.0 * (rank + rope))
+    hd = cfg.resolved_head_dim()
+    return (hd + 2) / (2.0 * hd)
+
+
 class TransferLedger:
     """Accumulates per-phase host<->device bytes for one serving run."""
 
     def __init__(self, cfg: ModelConfig, quant: str, *,
                  decisions: Optional[Dict[str, bool]] = None,
-                 host_sampling: bool = False):
+                 host_sampling: bool = False, kv_quant: str = "none"):
         self.cfg = cfg
         # Dense bf16 serving ("none") is accounted at 16-bit weight width —
         # the KernelCall tables only know the llama.cpp transfer formats.
         self.quant = quant if quant in RECIPES else "fp16"
         self.decisions = decisions
         self.host_sampling = host_sampling
+        self.kv_quant = kv_quant
+        # Multiplied into every kv_stream charge: the quantized paged
+        # arena streams int8 codes + fp16 scales instead of bf16 pages.
+        self._kv_stream_scale = kv_quant_stream_scale(cfg, kv_quant)
         # {phase: {category: {direction: bytes}}}
         self._cells: Dict[str, Dict[str, Dict[str, float]]] = {}
         self.tokens: Dict[str, int] = {p: 0 for p in PHASES}
@@ -101,6 +137,7 @@ class TransferLedger:
     # -- raw charge ------------------------------------------------------
     def charge(self, phase: str, category: str, direction: str,
                nbytes: float) -> None:
+        """Add ``nbytes`` to the (phase, category, direction) cell."""
         by_cat = self._cells.setdefault(phase, {})
         by_dir = by_cat.setdefault(category, {})
         by_dir[direction] = by_dir.get(direction, 0.0) + float(nbytes)
@@ -132,6 +169,9 @@ class TransferLedger:
         self.tokens["decode"] += batch
 
     def charge_cache_growth(self, phase: str, nbytes: float) -> None:
+        """KV bytes newly written into the device-resident arena (a
+        capacity cell, not a PCIe transfer — excluded from h2d/d2h
+        totals)."""
         self.charge(phase, "kv_arena", DEV, nbytes)
 
     def record_prefix_hit(self, tokens: int) -> None:
@@ -183,7 +223,7 @@ class TransferLedger:
         single-stream replay."""
         self.charge(phase, "tokens", H2D, new_tokens * 4)
         _, w_kv, a, o = self._split_kernel_bytes(kv_len, new_tokens)
-        self.charge(phase, "kv_stream", H2D, w_kv)
+        self.charge(phase, "kv_stream", H2D, w_kv * self._kv_stream_scale)
         self.charge(phase, "acts", H2D, a)
         self.charge(phase, "outs", D2H, o)
         if phase == "prefill":
@@ -207,6 +247,7 @@ class TransferLedger:
 
     # -- views -----------------------------------------------------------
     def breakdown(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        """Deep copy of the {phase: {category: {direction: bytes}}} cells."""
         return {p: {c: dict(d) for c, d in cats.items()}
                 for p, cats in self._cells.items()}
 
@@ -220,6 +261,7 @@ class TransferLedger:
         return out
 
     def total(self, direction: str) -> float:
+        """Bytes moved in ``direction`` (h2d or d2h) across all phases."""
         return sum(self.phase_bytes(p)[direction] for p in self._cells)
 
     def category_bytes(self, category: str) -> float:
@@ -321,6 +363,7 @@ class TransferReport:
 
     @classmethod
     def from_ledger(cls, ledger: TransferLedger) -> "TransferReport":
+        """Snapshot a live ledger into an immutable report."""
         return cls(breakdown=ledger.breakdown(),
                    phase_totals={p: ledger.phase_bytes(p)
                                  for p in ledger.breakdown()},

@@ -1,0 +1,77 @@
+"""Docstring-coverage gate for the ``repro.runtime`` public API.
+
+CI additionally runs ``ruff check --select D`` (see pyproject.toml) for
+style-level pydocstyle checks; ruff is not a runtime dependency, so this
+tier-1 test enforces the *presence* policy with nothing but the stdlib:
+
+  * every runtime module has a module docstring;
+  * every public module-level class and function has a docstring;
+  * every public method (including properties) of a public class has a
+    docstring.
+
+Exemptions, mirroring the ruff config's D1 ignores:
+
+  * ``_``-private names (single leading underscore);
+  * dunder methods (``__init__`` and friends — D105/D107);
+  * functions nested inside other functions (implementation detail,
+    not API surface).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+import pytest
+
+RUNTIME_DIR = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro" / "runtime"
+MODULES = sorted(RUNTIME_DIR.glob("*.py"))
+
+
+def _is_private(name: str) -> bool:
+    return name.startswith("_") and not (
+        name.startswith("__") and name.endswith("__"))
+
+
+def _is_dunder(name: str) -> bool:
+    return name.startswith("__") and name.endswith("__")
+
+
+def _missing_docstrings(path: pathlib.Path) -> list:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{path.name}:1 <module>")
+
+    def visit(defs, owner=None):
+        for node in defs:
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                continue
+            name = node.name
+            if _is_private(name) or _is_dunder(name):
+                continue
+            label = f"{owner}.{name}" if owner else name
+            if ast.get_docstring(node) is None:
+                missing.append(f"{path.name}:{node.lineno} {label}")
+            if isinstance(node, ast.ClassDef):
+                # Public methods of this public class; nothing deeper
+                # (functions nested in methods are implementation).
+                visit(ast.iter_child_nodes(node), owner=name)
+    visit(ast.iter_child_nodes(tree))
+    return missing
+
+
+def test_runtime_modules_discovered():
+    """Sanity: the scan actually sees the runtime package."""
+    names = {p.name for p in MODULES}
+    assert {"engine.py", "kvcache.py", "scheduler.py",
+            "transfers.py", "request.py"} <= names
+
+
+@pytest.mark.parametrize("path", MODULES, ids=lambda p: p.name)
+def test_runtime_public_api_documented(path):
+    """Every public name in repro.runtime carries a docstring."""
+    missing = _missing_docstrings(path)
+    assert not missing, (
+        "public API without docstrings (add one, or mark private):\n  "
+        + "\n  ".join(missing))
