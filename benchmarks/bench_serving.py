@@ -59,6 +59,14 @@ elements (see docs/transfer-ledger.md) — and e2e greedy token agreement
 (teacher-forced against bf16 rollouts, margin-confident positions) must
 stay >= 0.99.
 
+Part 8 is the sharded-serving acceptance: the same stream served
+through a 1x2 ('data' x 'model') mesh must be token-identical to the
+unsharded engine with one step compile, the aggregate ledger must not
+move (committed baselines are degree-invariant by construction), and
+the *per-device* weight-stream bytes/token — each device streams only
+its out-feature shard of every linear — must drop to <= 0.55x TP=1
+(exact factor 1/tp). Runs in a subprocess under forced host devices.
+
 Runs on the reduced model (CPU-friendly); the analytic full-size numbers
 live in bench_e2e_latency.py. ``--json PATH`` writes the CI benchmark-
 regression metrics (see .github/workflows/ci.yml and
@@ -68,6 +76,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -502,6 +514,106 @@ def kv_quant_comparison(cfg, model, params) -> None:
     METRICS["kv_quant_token_agreement"] = agree
 
 
+_SHARDED_WORKER = r"""
+import json, os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+from repro.configs.registry import get_config
+from repro.models.api import build_model
+from repro.runtime.engine import ServingEngine
+from repro.runtime.request import Request
+
+cfg = get_config("qwen3-0.6b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+
+def requests():
+    rng = np.random.RandomState(29)
+    return [Request(rid=i, tokens=rng.randint(0, cfg.vocab_size,
+                                              int(rng.randint(6, 13))),
+                    max_new_tokens=8) for i in range(6)]
+
+
+out = {}
+for tp in (1, 2):
+    mesh = None
+    if tp > 1:
+        devs = np.array(jax.devices()[:tp]).reshape(1, tp)
+        mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    eng = ServingEngine(model, params, num_slots=4, max_seq=24,
+                        chunk_size=8, block_size=4, num_blocks=23,
+                        paged_attn="fused", mesh=mesh)
+    rep = eng.serve(requests(), seed=0, realtime=False)
+    led = rep.ledger
+    out[f"tp{tp}"] = {
+        "tokens": [[int(t) for t in s.generated] for s in rep.sequences],
+        "compiles": rep.step_compiles,
+        "bytes_per_token": led.bytes_per_token(),
+        "weight_stream_per_token": led.weight_stream_bytes_per_token(),
+        "per_device_weight_stream_per_token":
+            led.per_device_weight_stream_bytes_per_token(),
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+def sharded_tp_scaling() -> None:
+    """Part 8: tensor-parallel serving through the unified chunked step.
+
+    The mesh shards weight out-features over 'model', so each device
+    streams 1/tp of every linear weight per step — the paper's dominant
+    transfer term divides across the mesh while the *aggregate* ledger
+    stays degree-invariant (same workload, same totals, same baselines).
+    Runs in a subprocess because the mesh needs forced host devices
+    (XLA_FLAGS must be set before jax import; the in-process benches
+    need the real single CPU device). Gates: token-identical outputs,
+    one step compile, and per-device weight-stream bytes/token at TP=2
+    <= 0.55x TP=1 (the exact factor is 0.5)."""
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(_SHARDED_WORKER)
+        worker = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run([sys.executable, worker], capture_output=True,
+                              text=True, timeout=1800, env=env)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+    finally:
+        os.unlink(worker)
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    tp1, tp2 = res["tp1"], res["tp2"]
+    assert tp2["tokens"] == tp1["tokens"], "TP=2 diverged from TP=1"
+    assert tp1["compiles"] == 1 and tp2["compiles"] == 1
+    # Aggregate cells are degree-invariant; the per-device stream halves.
+    assert tp2["bytes_per_token"] == tp1["bytes_per_token"]
+    assert tp2["weight_stream_per_token"] == tp1["weight_stream_per_token"]
+    ratio = tp2["per_device_weight_stream_per_token"] \
+        / tp1["per_device_weight_stream_per_token"]
+    assert ratio <= 0.55, f"per-device weight-stream ratio {ratio} > 0.55"
+    for tp in (1, 2):
+        r = res[f"tp{tp}"]
+        emit(f"serving/{ARCH}/sharded_tp{tp}/"
+             f"per_device_weight_stream_bytes_per_token",
+             r["per_device_weight_stream_per_token"],
+             f"aggregate={r['weight_stream_per_token']:.1f} "
+             f"step_compiles={r['compiles']}")
+    emit(f"serving/{ARCH}/sharded_tp2/per_device_weight_stream_ratio",
+         ratio,
+         "(acceptance: <= 0.55x TP=1; exact 1/tp factor, outputs pinned "
+         "token-identical in-bench, aggregate ledger degree-invariant)")
+    METRICS["sharded_tp2_weight_stream_ratio"] = ratio
+    METRICS["sharded_step_compiles"] = tp2["compiles"]
+    METRICS["sharded_aggregate_bytes_ratio"] = \
+        tp2["bytes_per_token"] / tp1["bytes_per_token"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
@@ -520,6 +632,7 @@ def main() -> None:
     speculative_amortization(cfg, model, params)
     prefix_sharing(cfg, model, params)
     kv_quant_comparison(cfg, model, params)
+    sharded_tp_scaling()
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "bench_serving", "arch": f"{ARCH}-reduced",

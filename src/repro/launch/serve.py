@@ -43,6 +43,16 @@ draft model (own arena, own ledger account):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --requests 8 --spec draft --spec-draft-model qwen3-0.6b
 
+Sharded serving (``--dp``/``--tp``): the same jitted step runs over a
+``(data, model)`` device mesh — slots data-parallel over 'data', heads
+and weight-stream tensors tensor-parallel over 'model' — with
+token-identical outputs and per-device ledger accounting. Testable on
+CPU by forcing host devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
+      --slots 4 --dp 2 --tp 2 --block-size 8
+
 Batch mode (legacy lockstep interface, kept for the paper's fixed [in:out]
 workload grid):
 
@@ -155,7 +165,7 @@ def run_stream(cfg, model, params, args) -> None:
         spec=args.spec, spec_k=args.spec_k or 4,
         spec_draft_model=draft_model, spec_draft_params=draft_params,
         prefix_cache=args.prefix_cache, kv_quant=args.kv_quant,
-        host_sampling=args.host_sampling)
+        host_sampling=args.host_sampling, mesh=build_mesh(args))
 
     report = engine.serve(reqs, seed=args.seed)
     st = report.stats
@@ -208,6 +218,17 @@ def run_stream(cfg, model, params, args) -> None:
           f"arena {st.cache_bytes/1e6:.1f} MB")
     print(f"  latency p50 {pct[50]*1e3:.0f} ms | p90 {pct[90]*1e3:.0f} ms | "
           f"p99 {pct[99]*1e3:.0f} ms")
+    if engine.mesh is not None:
+        tr = st.transfers
+        line = (f"  mesh dp={engine.dp} tp={engine.tp}: per-device "
+                f"bytes/token {tr.per_device_bytes_per_token/1e6:.3f} MB"
+                f" | per-device weight-stream/token "
+                f"{tr.per_device_weight_stream_bytes_per_token/1e6:.3f}"
+                f" MB")
+        if engine.paged:
+            line += (f" | per-device paged-read/token "
+                     f"{(st.paged_kv_read_bytes_per_device / max(st.decode_tokens, 1))/1e6:.3f} MB")
+        print(line)
     print("  transfer ledger (host<->device):")
     exec_s = {"prefill": st.prefill_s, "decode": st.decode_s}
     for line in report.ledger.summary_lines(exec_s):
@@ -319,6 +340,57 @@ def validate_args(ap, args) -> None:
         if args.chunk_size < 2:
             ap.error("--spec needs --chunk-size >= 2 (one committed-token "
                      "lane plus at least one proposal lane)")
+    if args.dp < 1 or args.tp < 1:
+        ap.error(f"--dp/--tp must be >= 1, got dp={args.dp} tp={args.tp}")
+    if args.dp * args.tp > 1:
+        if args.mode != "stream":
+            ap.error("--dp/--tp require --mode stream (the lockstep batch "
+                     "path builds unsharded engines)")
+        ndev = jax.device_count()
+        if args.dp * args.tp > ndev:
+            ap.error(f"mesh dp={args.dp} x tp={args.tp} needs "
+                     f"{args.dp * args.tp} devices but only {ndev} "
+                     "visible (set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=N to "
+                     "emulate on CPU)")
+        mcfg = get_config(args.arch)
+        if args.reduced:
+            mcfg = mcfg.reduced()
+        _check_mesh_divisibility(ap, mcfg, args.arch, args)
+        if args.dp > 1 and args.slots % args.dp:
+            ap.error(f"--slots {args.slots} not divisible by --dp "
+                     f"{args.dp}: each 'data' replica must own an equal "
+                     "contiguous slot block")
+        if args.spec == "draft" and args.tp > 1:
+            dcfg = get_config(args.spec_draft_model)
+            if args.reduced:
+                dcfg = dcfg.reduced()
+            _check_mesh_divisibility(ap, dcfg, args.spec_draft_model,
+                                     args, role="draft model ")
+
+
+def _check_mesh_divisibility(ap, cfg, arch: str, args,
+                             role: str = "") -> None:
+    """Refuse a tensor-parallel degree the architecture cannot shard
+    evenly — an uneven head split would need padded shards and break
+    token identity with the single-device run."""
+    for what, n in (("kv-heads", cfg.num_kv_heads),
+                    ("attention heads", cfg.num_heads),
+                    ("vocab", cfg.vocab_size)):
+        if n % args.tp:
+            ap.error(f"--tp {args.tp} does not divide {role}{arch}'s "
+                     f"{n} {what}; pick a tp that divides every "
+                     "sharded axis (heads, kv-heads, vocab)")
+
+
+def build_mesh(args):
+    """``(data, model)`` device mesh for --dp/--tp, or None when both
+    degrees are 1 (single-device serving, no GSPMD partitioning)."""
+    if args.dp * args.tp == 1:
+        return None
+    devs = np.array(jax.devices()[: args.dp * args.tp])
+    return jax.sharding.Mesh(devs.reshape(args.dp, args.tp),
+                             ("data", "model"))
 
 
 def main() -> None:
@@ -382,6 +454,15 @@ def main() -> None:
                     help="prepend this many common tokens to every "
                          "request (system-prompt workload — what "
                          "--prefix-cache deduplicates)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel degree: shard the slot axis (and "
+                         "the paged arena's pages) over the mesh 'data' "
+                         "axis; requires --slots divisible by dp")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard attention heads "
+                         "and weight-stream tensors over the mesh "
+                         "'model' axis; requires heads/kv-heads/vocab "
+                         "divisible by tp")
     ap.add_argument("--arrival", default="poisson",
                     choices=["poisson", "back2back"])
     ap.add_argument("--rate", type=float, default=8.0,

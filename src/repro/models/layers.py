@@ -132,9 +132,11 @@ def embedding_logits(p: Params, x: jnp.ndarray, fmt: str = "none",
     """Tied lm_head: logits = x @ E^T (offloadable dot product)."""
     if fmt == "none" or fmt == "fp16":
         w = p["w"]
-        return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
-    return kops.quantized_matmul(x, p, fmt, impl=impl, interpret=interpret,
-                                 out_dtype=x.dtype)
+        logits = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))
+    else:
+        logits = kops.quantized_matmul(x, p, fmt, impl=impl,
+                                       interpret=interpret, out_dtype=x.dtype)
+    return logits
 
 
 # ----------------------------------------------------------------------

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core.quant import pack, dequant
 from repro.models import layers
+from repro.parallel.sharding import constrain_replicated
 from repro.models.layers import Params
 
 
@@ -78,7 +79,12 @@ def moe_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
     e = cfg.moe
     b, s, d = x.shape
     t = b * s
-    xt = x.reshape(t, d)
+    # Serving-mesh exactness: the flattened token axis must enter
+    # routing/dispatch fully replicated — the SPMD partitioner
+    # miscompiles the data-dependent dispatch gather / expert einsum
+    # chain when it arrives 'data'-sharded on a combined dp x tp mesh
+    # (see parallel/sharding.py). No-op outside a serving step trace.
+    xt = constrain_replicated(x.reshape(t, d))
 
     logits = layers.linear_apply(p["router"], xt.astype(jnp.float32), "none")
     probs = jax.nn.softmax(logits, axis=-1)              # (t, E)

@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.core import convert
 from repro.models.api import ModelAPI
+from repro.parallel import sharding as shard_rules
 from repro.runtime import sampling, speculative
 from repro.runtime.kvcache import KV_QUANT_MODES, KVArena, PagedKVArena
 from repro.runtime.request import Request, SamplingParams, SeqState, Sequence
@@ -97,6 +98,12 @@ class GenStats:
     # slot's live blocks (clamped index map — O(live tokens)); the ref
     # gather materializes every slot's full-table-width view (O(arena)).
     paged_kv_read_bytes: float = 0.0
+    # Busiest 'data' replica's share of the above under a serving mesh —
+    # each replica walks only its own slots' tables, so the per-device
+    # figure is the max over replicas, not total/dp (equal to the total
+    # when dp == 1). Accounts the DP split only; the 'model' split of
+    # GQA pages is a further /tp not modeled here.
+    paged_kv_read_bytes_per_device: float = 0.0
     steps: int = 0                  # unified steps executed
     # Speculative decoding: proposal lanes fed / accepted by verification
     # / rejected KV positions rolled back (zeroed + block-trimmed).
@@ -200,6 +207,7 @@ class ServingEngine:
                  spec_draft_params=None,
                  prefix_cache: bool = False,
                  kv_quant: str = "none",
+                 mesh=None,
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
                  cache_dtype=jnp.bfloat16):
@@ -275,8 +283,25 @@ class ServingEngine:
                     "cross-attention KV is written by the one-time "
                     "encoder pass (write_prefill), which bypasses the "
                     "quantize-on-insert path")
+        self.mesh = mesh
+        self.dp, self.tp = shard_rules.serving_degrees(mesh)
+        if mesh is not None:
+            shard_rules.validate_serving_mesh(
+                mesh, num_heads=model.cfg.num_heads,
+                num_kv_heads=model.cfg.num_kv_heads,
+                vocab_size=model.cfg.vocab_size, num_slots=num_slots)
+            if spec == "draft":
+                # The draft model shards over the *same* mesh (its params
+                # and context pass run under the engine's activation
+                # rules), so it must satisfy the same divisibility.
+                shard_rules.validate_serving_mesh(
+                    mesh, num_heads=spec_draft_model.cfg.num_heads,
+                    num_kv_heads=spec_draft_model.cfg.num_kv_heads,
+                    vocab_size=spec_draft_model.cfg.vocab_size,
+                    num_slots=num_slots)
         self.model = model
-        self.params = params
+        self.params = params if mesh is None else jax.device_put(
+            params, shard_rules.serving_param_shardings(params, mesh))
         self.quant = quant
         self.kv_quant = kv_quant
         self.num_slots = num_slots
@@ -301,7 +326,7 @@ class ServingEngine:
             spec, draft_model=spec_draft_model,
             draft_params=spec_draft_params, num_slots=num_slots,
             max_seq=max_seq, chunk=self.chunk_size, quant=quant, impl=impl,
-            cache_dtype=cache_dtype) if spec != "off" else None
+            cache_dtype=cache_dtype, mesh=mesh) if spec != "off" else None
         self._block_size, self._num_blocks = block_size, num_blocks
         self.prefix_cache = prefix_cache
         # CoW pad width: a step writes at most chunk_size consecutive
@@ -312,7 +337,7 @@ class ServingEngine:
         self._donate_cache = donate_cache
         self._ledger_kw = dict(decisions=offload_decisions,
                                host_sampling=host_sampling,
-                               kv_quant=kv_quant)
+                               kv_quant=kv_quant, dp=self.dp, tp=self.tp)
         self._vlm = model.cfg.family == "vlm"
         self._fresh_arena_sched()
         self._step_compiles = 0
@@ -338,10 +363,23 @@ class ServingEngine:
             return model.decode_step(p, tokens, pos0, arena,
                                      lengths=lengths, **kw2)
 
+        def pin_cache(arena):
+            """Re-constrain the step's returned cache leaves to the
+            arena's *committed* shardings. Without this, GSPMD may pick a
+            different output layout than the input commitment, and the
+            next call's donated-input sharding mismatch costs a re-jit —
+            the step_compiles == 1 contract would silently break under a
+            mesh."""
+            if self.mesh is None or self.arena._shardings is None:
+                return arena
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                arena, self.arena._shardings)
+
         def step(p, tokens, pos0, lengths, active, arena, key, temps,
                  top_ks, top_ps, *rest):
             logits, arena = model_pass(p, tokens, pos0, lengths, arena,
                                        rest)
+            arena = pin_cache(arena)
             idx = jnp.maximum(lengths - 1, 0)
             last = jnp.take_along_axis(
                 logits, idx[:, None, None], axis=1)[:, 0]
@@ -361,6 +399,7 @@ class ServingEngine:
             ordinary ``lengths-1`` sampling row."""
             logits, arena = model_pass(p, tokens, pos0, lengths, arena,
                                        rest)
+            arena = pin_cache(arena)
             nxt, acc = sampling.verify_slots(
                 logits, tokens, key, temps, active,
                 prop_lens=prop_lens, lengths=lengths,
@@ -379,11 +418,12 @@ class ServingEngine:
                                       num_blocks=self._num_blocks,
                                       dtype=self.cache_dtype,
                                       prefix_cache=self.prefix_cache,
-                                      kv_quant=self.kv_quant)
+                                      kv_quant=self.kv_quant,
+                                      mesh=self.mesh)
         else:
             self.arena = KVArena(self.model, self.num_slots, self.max_seq,
-                                 dtype=self.cache_dtype)
-        self.sched = Scheduler(self.num_slots, self.max_seq)
+                                 dtype=self.cache_dtype, mesh=self.mesh)
+        self.sched = Scheduler(self.num_slots, self.max_seq, dp=self.dp)
         # rid -> (hit_tokens, resident_growth_blocks) recorded by the
         # admission gate, consumed by _admit_chunked after seq.admit().
         self._pending_prefix: Dict[int, tuple] = {}
@@ -633,12 +673,21 @@ class ServingEngine:
 
         t_step = time.perf_counter()
         before = self._jit_cache_size()
-        step_args = [self.params, jnp.asarray(tokens), jnp.asarray(pos0),
-                     jnp.asarray(lens), jnp.asarray(active),
-                     self.arena.buffers, key, jnp.asarray(temps),
-                     jnp.asarray(top_ks), jnp.asarray(top_ps)]
+        if self.mesh is None:
+            put = jnp.asarray
+        else:
+            # Commit per-slot operands with the slot axis over 'data' so
+            # GSPMD partitions the step along slots without a gather.
+            def put(a):
+                a = np.asarray(a)
+                return jax.device_put(
+                    a, shard_rules.slot_sharding(self.mesh, a.ndim))
+        step_args = [self.params, put(tokens), put(pos0),
+                     put(lens), put(active),
+                     self.arena.buffers, key, put(temps),
+                     put(top_ks), put(top_ps)]
         if spec_on:
-            step_args.insert(4, jnp.asarray(prop_lens))
+            step_args.insert(4, put(prop_lens))
         if self.paged:
             dev_tables, uploaded = self.arena.device_tables()
             step_args.append(dev_tables)
@@ -650,16 +699,23 @@ class ServingEngine:
                           jnp.asarray(emask)]
             if vis_bytes:
                 ledger.charge("prefill", "acts", "h2d", vis_bytes)
-        if spec_on:
-            # The verify step IS the chunked step with the verification
-            # sampling head; spec engines run it exclusively (zero
-            # proposals degenerate to plain sampling), so the jit cache
-            # still holds exactly one step compilation.
-            nxt, acc, self.arena.buffers = self._step_spec(*step_args)
-            acc_host = np.asarray(acc)
-        else:
-            nxt, self.arena.buffers = self._step(*step_args)
-            acc_host = None
+        # The scope makes the MoE token-path replication pin live during
+        # the step *trace* (first call only; later calls hit the jit
+        # cache). Committed input shardings carry everything else — see
+        # parallel/sharding.py for why no other in-graph constraint may
+        # appear (each one perturbs fusion and hence bf16 rounding).
+        with shard_rules.activation_mesh(self.mesh):
+            if spec_on:
+                # The verify step IS the chunked step with the
+                # verification sampling head; spec engines run it
+                # exclusively (zero proposals degenerate to plain
+                # sampling), so the jit cache still holds exactly one
+                # step compilation.
+                nxt, acc, self.arena.buffers = self._step_spec(*step_args)
+            else:
+                nxt, self.arena.buffers = self._step(*step_args)
+                acc = None
+        acc_host = np.asarray(acc) if acc is not None else None
         nxt_host = np.asarray(nxt)            # blocks until step completes
         t_end = time.perf_counter()
         now = t_end - t0
@@ -683,6 +739,8 @@ class ServingEngine:
             for slot, s in self.sched.active.items()))
         if self.paged and self.arena.has_paged:
             bsz, mb = self.arena.block_size, self.arena.max_blocks
+            rep_sz = ns // self.dp      # slots per 'data' replica
+            per_rep = np.zeros((self.dp,))
             if self.paged_attn == "fused":
                 # The kernel's exact fetch count: a slot row walks blocks
                 # 0..(pos0 + max(lengths,1) - 1)//bs (its last *valid*
@@ -690,16 +748,22 @@ class ServingEngine:
                 # that block), and Pallas elides the fetch whenever the
                 # resolved page repeats — so count distinct consecutive
                 # pages in each row's clamped walk (an idle slot's
-                # all-null row costs exactly one null-page fetch).
+                # all-null row costs exactly one null-page fetch). Under
+                # DP each replica walks only its own slots' rows, so the
+                # per-device figure is the busiest replica's share.
                 tb = self.arena.tables
-                blocks = 0
                 for s in range(ns):
                     depth = int(pos0[s]) + max(int(lens[s]), 1) - 1
                     walk = tb[s, :min(depth // bsz, mb - 1) + 1]
-                    blocks += 1 + int(np.sum(walk[1:] != walk[:-1]))
+                    per_rep[s // rep_sz] += \
+                        1 + int(np.sum(walk[1:] != walk[:-1]))
             else:
-                blocks = ns * mb        # dense gather of every table row
-            stats.paged_kv_read_bytes += blocks * self.arena.block_bytes()
+                # Dense gather of every table row; each replica only
+                # materializes the view for its local slot rows.
+                per_rep[:] = rep_sz * mb
+            bb = self.arena.block_bytes()
+            stats.paged_kv_read_bytes += float(per_rep.sum()) * bb
+            stats.paged_kv_read_bytes_per_device += float(per_rep.max()) * bb
         tok_bytes = 0.0 if self.paged else self.arena.token_bytes()
         for slot, seq in list(self.sched.active.items()):
             n = feeds[slot]
@@ -779,7 +843,7 @@ class ServingEngine:
         by the next (the system-prompt-across-streams case). ``reset()``
         additionally rebuilds the arena, dropping the cache."""
         if self.sched.stats.steps or self.sched.finished:
-            self.sched = Scheduler(self.num_slots, self.max_seq)
+            self.sched = Scheduler(self.num_slots, self.max_seq, dp=self.dp)
             self._pending_prefix.clear()
         if self.paged:
             for r in requests:

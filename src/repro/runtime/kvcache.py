@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.models.api import ModelAPI
 from repro.models.attention import KV_QUANT_SCALE_DTYPE
+from repro.parallel.sharding import (serving_cache_shardings, serving_degrees,
+                                     slot_sharding)
 
 #: Supported paged-KV storage quantization modes.
 KV_QUANT_MODES = ("none", "int8")
@@ -69,7 +71,8 @@ _STEP_DTYPE_CACHE: "weakref.WeakKeyDictionary[ModelAPI, dict]" = \
 
 
 def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
-                     const_flags: Tuple[bool, ...]) -> Tuple:
+                     const_flags: Tuple[bool, ...],
+                     mesh_key: Tuple[int, int] = (1, 1)) -> Tuple:
     """Per-leaf arena storage dtypes (flattened leaf order).
 
     Seq-indexed KV leaves store the requested cache ``dtype`` (the decode
@@ -77,15 +80,18 @@ def step_leaf_dtypes(model: ModelAPI, batch: int, max_seq: int, dtype,
     recurrent/conv state, enc-dec cross KV) instead store whatever dtype
     the decode step **emits** at fixed point — probed with
     ``jax.eval_shape`` over abstract params, so no allocation or compile
-    (memoized per (model, shapes, dtype): arena rebuilds don't re-trace).
-    Without this, a bf16 arena hands the SSM recurrence a bf16 state and
-    gets an f32 one back: the second step sees new traced dtypes and
-    recompiles (the ssm/hybrid "one extra step compile" ROADMAP item).
-    Pure-attention models skip the probe entirely (no const leaves)."""
+    (memoized per (model, shapes, dtype, mesh): arena rebuilds don't
+    re-trace). Without this, a bf16 arena hands the SSM recurrence a bf16
+    state and gets an f32 one back: the second step sees new traced dtypes
+    and recompiles (the ssm/hybrid "one extra step compile" ROADMAP item).
+    Pure-attention models skip the probe entirely (no const leaves).
+    ``mesh_key`` is the serving mesh fingerprint ``(dp, tp)`` — entries
+    probed under different meshes must not collide, even though today's
+    abstract probe is layout-blind (a sharded probe variant would not be)."""
     if not any(const_flags):
         return tuple(dtype for _ in const_flags)
     per_model = _STEP_DTYPE_CACHE.setdefault(model, {})
-    key = (batch, max_seq, jnp.dtype(dtype).name, const_flags)
+    key = (batch, max_seq, jnp.dtype(dtype).name, const_flags, mesh_key)
     hit = per_model.get(key)
     if hit is not None:
         return hit
@@ -316,11 +322,13 @@ class KVArena:
     """
 
     def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, mesh=None):
         self.model = model
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.dtype = dtype
+        self.mesh = mesh
+        self.dp, self.tp = serving_degrees(mesh)
         self._free = _FreeHeap(num_slots)
         # Leaves whose extent does NOT follow the sequence length (SSM
         # recurrent/conv state, enc-dec cross KV) carry *state*, not
@@ -336,11 +344,24 @@ class KVArena:
         # Per-leaf storage dtypes: state leaves keep the dtype the decode
         # step emits (f32 SSM state), so step 1 never re-traces.
         self._leaf_dtypes = step_leaf_dtypes(model, num_slots, max_seq,
-                                             dtype, self._const_flags)
+                                             dtype, self._const_flags,
+                                             (self.dp, self.tp))
         shapes = model.cache_shapes(num_slots, max_seq)
         leaves, treedef = jax.tree.flatten(shapes, is_leaf=is_shape)
         self.buffers = treedef.unflatten(
             [jnp.zeros(s, dt) for s, dt in zip(leaves, self._leaf_dtypes)])
+        self._shardings = None
+        if mesh is not None:
+            self._shardings = serving_cache_shardings(self.buffers, mesh)
+            self.buffers = jax.device_put(self.buffers, self._shardings)
+
+    def _repin(self) -> None:
+        """Re-commit the buffers to their mesh shardings after an
+        out-of-step jitted mutation (insert/reset/rollback helpers let
+        GSPMD pick output layouts; a no-op device_put restores the
+        committed placement so the serving step never re-jits)."""
+        if self._shardings is not None:
+            self.buffers = jax.device_put(self.buffers, self._shardings)
 
     # -- slot lifecycle -------------------------------------------------
     @property
@@ -367,6 +388,7 @@ class KVArena:
         """Insert a B=1 prefill cache (seq <= max_seq) into ``slot``."""
         self.buffers = _arena_insert(self.buffers, prefill_cache,
                                      jnp.int32(slot))
+        self._repin()
 
     def reset_slot(self, slot: int) -> None:
         """Zero ``slot``'s constant-size state leaves for a fresh chunked
@@ -379,6 +401,7 @@ class KVArena:
         leaves, treedef = jax.tree.flatten(self.buffers)
         new = _zero_const_leaves(leaves, jnp.int32(slot), self._const_flags)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
 
     def nbytes(self) -> int:
         """Total device bytes of the arena's cache storage."""
@@ -416,6 +439,7 @@ class KVArena:
         new = _zero_span(leaves, jnp.int32(slot), jnp.int32(start),
                          jnp.int32(count), width, seq_flags)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -572,11 +596,13 @@ class PagedKVArena:
     def __init__(self, model: ModelAPI, num_slots: int, max_seq: int,
                  block_size: int, num_blocks: Optional[int] = None,
                  dtype=jnp.bfloat16, prefix_cache: bool = False,
-                 kv_quant: str = "none"):
+                 kv_quant: str = "none", mesh=None):
         """Build the paged arena. See the class docstring for the model;
         ``kv_quant="int8"`` stores paged leaves as blocked int8 code
         pages plus float16 scale pages (quantize-on-insert, in-kernel
-        dequant — see ``page_layout``)."""
+        dequant — see ``page_layout``). ``mesh`` commits the page storage
+        to a ('data','model') serving mesh: pages shard over 'data', GQA
+        kv-heads over 'model' (see ``parallel.sharding``)."""
         if not (1 <= block_size <= max_seq):
             raise ValueError(f"block_size {block_size} outside [1, {max_seq}]")
         if kv_quant not in KV_QUANT_MODES:
@@ -593,6 +619,8 @@ class PagedKVArena:
         self.null_block = num_blocks                  # last physical page
         self.dtype = dtype
         self.kv_quant = kv_quant
+        self.mesh = mesh
+        self.dp, self.tp = serving_degrees(mesh)
 
         shapes, paged = model.paged_cache_shapes(num_slots, num_blocks + 1,
                                                  block_size)
@@ -602,7 +630,8 @@ class PagedKVArena:
         # slot arena; paged page leaves store the requested cache dtype.
         self._leaf_dtypes = step_leaf_dtypes(
             model, num_slots, max_seq, dtype,
-            tuple(not f for f in self._paged_flags))
+            tuple(not f for f in self._paged_flags),
+            (self.dp, self.tp))
         is_shape = lambda x: isinstance(x, tuple)
         if kv_quant == "int8":
             if not any(self._paged_flags):
@@ -635,6 +664,19 @@ class PagedKVArena:
         self.buffers = treedef.unflatten(
             [jnp.zeros(s, dt) for s, dt in zip(leaves, self._leaf_dtypes)])
         self.has_paged = any(self._paged_flags)
+        self._shardings = None
+        self._table_sharding = None
+        # Pages shard over 'data' only when the page count divides dp
+        # (the rule in serving_cache_spec); remember the outcome so
+        # page_layout can report the local shard's page count.
+        self._pages_data_sharded = (
+            mesh is not None and self.dp > 1 and self.has_paged
+            and (num_blocks + 1) % self.dp == 0)
+        if mesh is not None:
+            self._shardings = serving_cache_shardings(self.buffers, mesh)
+            self.buffers = jax.device_put(self.buffers, self._shardings)
+            if self.dp > 1 and num_slots % self.dp == 0:
+                self._table_sharding = slot_sharding(mesh, 2)
         # Shape-static byte quantities, precomputed once (resident_bytes
         # runs on the per-step hot path).
         self._nbytes = cache_nbytes(self.buffers)
@@ -663,6 +705,14 @@ class PagedKVArena:
             self.prefix_cache = PrefixCache(block_size)
             self.allocator.on_alloc = self.prefix_cache.invalidate_block
 
+    def _repin(self) -> None:
+        """Re-commit the page buffers to their mesh shardings after an
+        out-of-step jitted mutation (CoW splits, rollback zeroing, prefill
+        scatter let GSPMD pick output layouts; a no-op device_put restores
+        the committed placement so the serving step never re-jits)."""
+        if self._shardings is not None:
+            self.buffers = jax.device_put(self.buffers, self._shardings)
+
     # -- queries ---------------------------------------------------------
     def page_layout(self) -> dict:
         """The page/table layout contract the fused paged-attention
@@ -685,11 +735,23 @@ class PagedKVArena:
           during the walk and zeroed pages dequantize to exactly zero,
           so the null/rollback/CoW contracts above apply unchanged.
 
+        Under a data-parallel serving mesh ``num_pages`` stays the
+        *global* (traced) page count — the kernel contract is unchanged —
+        while ``local_pages`` reports the pages physically resident on
+        one 'data' shard (``num_pages / dp`` when the page axis sharded,
+        else the full count). Per-device byte accounting must scale by
+        ``local_pages``, not ``num_pages``, so the fused-read
+        arena-scaling gate stays exactly 1.0x under DP.
+
         See ``docs/kernel-contracts.md`` for the full written contract.
         """
+        pages = self.num_blocks + 1
+        local = pages // self.dp if self._pages_data_sharded else pages
         return {"block_size": self.block_size,
                 "max_blocks": self.max_blocks,
-                "num_pages": self.num_blocks + 1,
+                "num_pages": pages,
+                "local_pages": local,
+                "data_shards": self.dp,
                 "null_block": self.null_block,
                 "kv_quant": self.kv_quant}
 
@@ -721,7 +783,11 @@ class PagedKVArena:
         decode steps move zero table bytes."""
         fresh = 0
         if self._dev_tables is None:
-            self._dev_tables = jnp.asarray(self.tables)
+            if self._table_sharding is not None:
+                self._dev_tables = jax.device_put(self.tables,
+                                                  self._table_sharding)
+            else:
+                self._dev_tables = jnp.asarray(self.tables)
             fresh = self.tables.nbytes
             self.table_uploads += 1
         return self._dev_tables, fresh
@@ -789,6 +855,7 @@ class PagedKVArena:
                               jnp.asarray([dst], jnp.int32),
                               self._paged_flags)
             self.buffers = jax.tree.unflatten(treedef, new)
+            self._repin()
             self.allocator.free([cow_src])
             self.cow_splits += 1
             blocks = shared + [dst] + fresh[1:]
@@ -857,6 +924,7 @@ class PagedKVArena:
         new = _copy_pages(leaves, jnp.asarray(src), jnp.asarray(dst),
                           self._paged_flags)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
         for j, (i, _) in enumerate(cow):
             owned[i] = fresh[j]
             self.tables[slot, i] = fresh[j]
@@ -907,6 +975,7 @@ class PagedKVArena:
         const = tuple(not f for f in self._paged_flags)
         new = _zero_const_leaves(leaves, jnp.int32(slot), const)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
 
     # -- storage ---------------------------------------------------------
     def write_prefill(self, prefill_cache, slot: int) -> None:
@@ -938,6 +1007,7 @@ class PagedKVArena:
         new = _paged_insert(buf_leaves, leaves, phys, jnp.int32(slot),
                             self._paged_flags)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
 
     # -- byte accounting --------------------------------------------------
     def nbytes(self) -> int:
@@ -1006,6 +1076,7 @@ class PagedKVArena:
         new = _zero_paged_positions(leaves, jnp.asarray(phys),
                                     jnp.asarray(offs), self._paged_flags)
         self.buffers = jax.tree.unflatten(treedef, new)
+        self._repin()
         keep = self.blocks_needed(start) if start else 0
         owned = self._slot_blocks[slot]
         if len(owned) <= keep:

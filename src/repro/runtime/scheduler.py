@@ -55,11 +55,27 @@ class SchedulerStats:
     deferred_feeds: int = 0         # chunked mode: slots starved by budget
     spec_lanes_planned: int = 0     # speculative proposal lanes funded
     spec_lanes_trimmed: int = 0     # proposal lanes cut by budget pressure
+    # Data-parallel serving: per-'data'-replica occupancy accumulators
+    # (replica r owns slots [r*ns/dp, (r+1)*ns/dp); slot *assignment*
+    # stays globally first-free — identity with single-device depends on
+    # it — these only measure how evenly load lands across replicas).
+    dp: int = 1
+    replica_occupancy_sums: List[float] = dataclasses.field(
+        default_factory=list)
+    replica_max_occupancy: List[int] = dataclasses.field(
+        default_factory=list)
 
     @property
     def mean_occupancy(self) -> float:
         """Mean active-slot count per executed step."""
         return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    @property
+    def replica_mean_occupancy(self) -> List[float]:
+        """Mean active-slot count per step, per 'data' replica."""
+        if not self.steps:
+            return [0.0] * self.dp
+        return [s / self.steps for s in self.replica_occupancy_sums]
 
 
 class Scheduler:
@@ -68,16 +84,27 @@ class Scheduler:
     Arena-agnostic — slot/block policy lives behind the ``admit_fn`` /
     ``free_fn`` callables the engine supplies."""
 
-    def __init__(self, num_slots: int, max_seq: int):
+    def __init__(self, num_slots: int, max_seq: int, dp: int = 1):
+        if dp < 1 or num_slots % dp:
+            raise ValueError(f"num_slots={num_slots} not divisible by "
+                             f"dp={dp}")
         self.num_slots = num_slots
         self.max_seq = max_seq
+        self.dp = dp
+        self._rep_size = num_slots // dp
         self.pending: Deque[Sequence] = deque()     # submitted, not arrived
         self.queue: Deque[Sequence] = deque()       # arrived, waiting on slot
         self.active: Dict[int, Sequence] = {}       # slot -> sequence
         self.finished: List[Sequence] = []
         self._ever_used: set = set()
         self._admit_counter = 0
-        self.stats = SchedulerStats()
+        self.stats = SchedulerStats(
+            dp=dp, replica_occupancy_sums=[0.0] * dp,
+            replica_max_occupancy=[0] * dp)
+
+    def replica_of(self, slot: int) -> int:
+        """The 'data' replica hosting ``slot`` (contiguous block map)."""
+        return slot // self._rep_size
 
     # -- submission ------------------------------------------------------
     def submit(self, req: Request) -> Sequence:
@@ -175,11 +202,20 @@ class Scheduler:
 
     # -- step bookkeeping -------------------------------------------------
     def record_step(self) -> None:
-        """Account one executed unified step (occupancy tallies)."""
+        """Account one executed unified step (occupancy tallies, global
+        and per-'data'-replica)."""
         self.stats.steps += 1
         self.stats.occupancy_sum += len(self.active)
         self.stats.max_occupancy = max(self.stats.max_occupancy,
                                        len(self.active))
+        if self.dp > 1:
+            counts = [0] * self.dp
+            for slot in self.active:
+                counts[self.replica_of(slot)] += 1
+            for r, c in enumerate(counts):
+                self.stats.replica_occupancy_sums[r] += c
+                self.stats.replica_max_occupancy[r] = max(
+                    self.stats.replica_max_occupancy[r], c)
 
     def retire(self, slot_free) -> List[Sequence]:
         """Collect DONE sequences, freeing their slots via ``slot_free``."""

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.parallel import sharding as shard_rules
 from repro.runtime.kvcache import KVArena
 from repro.runtime.request import Sequence
 from repro.runtime.transfers import TransferLedger
@@ -141,21 +142,25 @@ class DraftModelProposer:
     """Small-model drafting over a mirrored slot arena.
 
     The draft model runs greedy chunked decode on its own contiguous
-    ``KVArena`` sized like the target's slot axis, through its own jitted
-    (slots, chunk) step — one traced shape for catch-up chunks and
-    proposal feedback alike. Per engine step it (1) streams each
-    speculating slot's newly committed tokens into the draft cache
-    (catch-up), (2) rolls autoregressively k tokens forward, then (3)
-    rewinds its cache depth to the verified prefix next round (rejected
-    draft KV is masked stale state, rewritten before any read — the
-    *target* arena is the one held to the bit-identical rollback
-    contract). All draft transfers are charged to ``self.ledger`` — a
-    separate account, so bench/serve reports show the draft's weight
-    stream alongside the amortization it buys."""
+    ``KVArena`` sized like the target's slot axis. Per engine step it
+    (1) streams each speculating slot's newly committed tokens into the
+    draft cache (catch-up), (2) rolls autoregressively k tokens forward,
+    then (3) rewinds its cache depth to the verified prefix next round
+    (rejected draft KV is masked stale state, rewritten before any read —
+    the *target* arena is the one held to the bit-identical rollback
+    contract). The catch-up feed and ALL k greedy rolls run in ONE
+    jitted dispatch: a chunked pass whose emitted token seeds a
+    ``lax.scan`` of single-token feedback passes — one host->device
+    round trip per proposal round instead of 1 + (k-1). All draft
+    transfers are charged to ``self.ledger`` — a separate account, so
+    bench/serve reports show the draft's weight stream alongside the
+    amortization it buys. With ``mesh`` set, the draft shards over the
+    *same* serving mesh as the target (params out-feature over 'model',
+    slot axis over 'data')."""
 
     def __init__(self, model, params, *, num_slots: int, max_seq: int,
                  chunk: int, quant: str = "none", impl: str = "ref",
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, mesh=None):
         if model.cfg.family in RECURRENT_FAMILIES:
             raise ValueError(
                 f"draft model family {model.cfg.family!r} is recurrent — "
@@ -167,12 +172,17 @@ class DraftModelProposer:
                 "embeds) the proposer cannot provide — it would draft "
                 "from zeroed cross state; use a decoder-only draft")
         self.model = model
-        self.params = params
+        self.mesh = mesh
+        self.dp, self.tp = shard_rules.serving_degrees(mesh)
+        self.params = params if mesh is None else jax.device_put(
+            params, shard_rules.serving_param_shardings(params, mesh))
         self.num_slots = num_slots
         self.chunk = max(2, chunk)
         self.quant = quant
-        self.arena = KVArena(model, num_slots, max_seq, dtype=cache_dtype)
-        self.ledger = TransferLedger(model.cfg, quant)
+        self.arena = KVArena(model, num_slots, max_seq, dtype=cache_dtype,
+                             mesh=mesh)
+        self.ledger = TransferLedger(model.cfg, quant, dp=self.dp,
+                                     tp=self.tp)
         self.steps = 0
         # Committed context length the draft has verified-and-ingested,
         # and the speculative tail (proposal tokens already in its cache).
@@ -181,23 +191,58 @@ class DraftModelProposer:
 
         kw = dict(quant=quant, impl=impl)
 
-        def dstep(p, tokens, pos0, lengths, active, arena):
+        def pin_cache(arena):
+            if mesh is None or self.arena._shardings is None:
+                return arena
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                arena, self.arena._shardings)
+
+        def greedy(logits_last, active):
+            return jnp.where(active, jnp.argmax(logits_last, axis=-1)
+                             .astype(jnp.int32), 0)
+
+        def droll(p, tokens, pos0, lengths, active, arena, rolls):
+            """One dispatch per proposal round: chunked catch-up feed,
+            whose final-position argmax is proposal 1, then ``rolls``
+            single-token greedy feedback passes under ``lax.scan`` —
+            proposals 2..k with zero extra dispatches. ``rolls`` is
+            static (one compilation per distinct depth, bounded by
+            chunk-1). Lanes needing fewer rolls keep rolling; their
+            surplus tokens are dropped on the host and their surplus KV
+            writes land past the tracked tail, where the next round's
+            feed rewrites them before any read."""
             logits, arena = model.decode_step(p, tokens, pos0, arena,
                                               lengths=lengths, **kw)
+            arena = pin_cache(arena)
             idx = jnp.maximum(lengths - 1, 0)
             last = jnp.take_along_axis(
                 logits, idx[:, None, None], axis=1)[:, 0]
-            nxt = jnp.where(active, jnp.argmax(last, axis=-1)
-                            .astype(jnp.int32), 0)
-            return nxt, arena
-        self._step = jax.jit(dstep, donate_argnums=(5,))
+            nxt = greedy(last, active)
+            if rolls == 0:
+                return nxt[:, None], arena
+
+            feed_len = active.astype(jnp.int32)   # inactive lanes write 0
+            def body(carry, _):
+                tok, pos, arena = carry
+                lg, arena = model.decode_step(p, tok[:, None], pos, arena,
+                                              lengths=feed_len, **kw)
+                arena = pin_cache(arena)
+                nx = greedy(lg[:, 0], active)
+                return (nx, pos + 1, arena), nx
+            (_, _, arena), rolled = jax.lax.scan(
+                body, (nxt, pos0 + lengths, arena), None, length=rolls)
+            props = jnp.concatenate([nxt[:, None], rolled.T], axis=1)
+            return props, arena
+        self._roll = jax.jit(droll, static_argnums=(6,),
+                             donate_argnums=(5,))
 
     # -- lifecycle hooks -------------------------------------------------
     def reset_run(self) -> None:
         """Fresh ledger + slot state for a new serve() run (the draft's
         jitted step and arena storage stay warm — compilations are not
         repaid, mirroring ``ServingEngine.reset``)."""
-        self.ledger = TransferLedger(self.model.cfg, self.quant)
+        self.ledger = TransferLedger(self.model.cfg, self.quant,
+                                     dp=self.dp, tp=self.tp)
         self.steps = 0
         self._depth = [0] * self.num_slots
         self._tail = [[] for _ in range(self.num_slots)]
@@ -224,65 +269,115 @@ class DraftModelProposer:
         self._depth[slot] = depth + keep
         self._tail[slot] = []
 
+    def _dispatch(self, tokens, pos0, lens, active, rolls: int):
+        """Run one jitted draft dispatch (chunked feed + ``rolls`` scan
+        passes); returns the (num_slots, 1 + rolls) proposal matrix on
+        the host. Sharding comes from the committed inputs, plus the
+        MoE replication pin the activation scope enables (see
+        parallel/sharding.py)."""
+        if self.mesh is None:
+            put = jnp.asarray
+        else:
+            def put(a):
+                a = np.asarray(a)
+                return jax.device_put(
+                    a, shard_rules.slot_sharding(self.mesh, a.ndim))
+        with shard_rules.activation_mesh(self.mesh):
+            props, self.arena.buffers = self._roll(
+                self.params, put(tokens), put(pos0), put(lens),
+                put(active), self.arena.buffers, rolls)
+        self.steps += 1
+        return np.asarray(props)
+
     def propose(self, seqs: Dict[int, Sequence],
                 grants: Dict[int, int]) -> Dict[int, np.ndarray]:
-        """Batched drafting: every speculating slot advances through the
-        same jitted (slots, chunk) greedy step until each has its granted
-        number of proposals. Lanes still catching up on committed tokens
-        ride the same iterations as lanes already rolling forward."""
+        """Batched drafting, ONE dispatch per round: every speculating
+        slot's catch-up tokens ride a chunked feed whose final logits
+        emit proposal 1, and the jitted ``lax.scan`` rolls the remaining
+        proposals without returning to the host. (Only a sequence whose
+        committed backlog exceeds a whole chunk — preemption re-admission
+        — pays extra catch-up dispatches first.)"""
         ctxs = {s: seqs[s].context_tokens() for s in grants}
         for slot, ctx in ctxs.items():
             self._sync(slot, ctx)
-        # Per-lane feed queues: committed catch-up tokens first (tracked
-        # by ``catchup`` so depth/tail accounting stays exact), then the
-        # lane's own greedy feedback until k proposals exist.
+        # Per-lane committed catch-up queues. The final token of each
+        # queue is consumed by the proposal dispatch itself (its logits
+        # seed the roll), so phase-1 chunked catch-up always leaves at
+        # least one token pending.
         pending = {s: [int(t) for t in ctxs[s][self._depth[s]:]]
                    for s in grants}
-        catchup = {s: len(pending[s]) for s in grants}
-        props: Dict[int, List[int]] = {s: [] for s in grants}
-        while any(pending[s] for s in grants):
+        while any(len(p) > self.chunk for p in pending.values()):
             tokens = np.zeros((self.num_slots, self.chunk), np.int32)
             pos0 = np.zeros((self.num_slots,), np.int32)
             lens = np.zeros((self.num_slots,), np.int32)
             active = np.zeros((self.num_slots,), bool)
             for s in grants:
-                n = min(len(pending[s]), self.chunk)
-                if n == 0:
+                n = min(len(pending[s]) - 1, self.chunk)
+                if n <= 0:
                     continue
                 tokens[s, :n] = pending[s][:n]
                 pending[s] = pending[s][n:]
-                pos0[s] = self._depth[s] + len(self._tail[s])
+                pos0[s] = self._depth[s]
                 lens[s] = n
                 active[s] = True
-                c = min(n, catchup[s])
-                catchup[s] -= c
-                self._depth[s] += c
-                self._tail[s].extend(tokens[s, c:n].tolist())
-            nxt, self.arena.buffers = self._step(
-                self.params, jnp.asarray(tokens), jnp.asarray(pos0),
-                jnp.asarray(lens), jnp.asarray(active),
-                self.arena.buffers)
-            nxt_host = np.asarray(nxt)
-            self.steps += 1
+                self._depth[s] += n
+            self._dispatch(tokens, pos0, lens, active, 0)
             self.ledger.charge_step_weights()         # shared linear pass
             for s in grants:
-                n = int(lens[s])
-                if n == 0:
-                    continue
-                self.ledger.charge_chunk("decode", n, int(pos0[s]) + n)
-                if not pending[s] and len(props[s]) < grants[s]:
-                    tok = int(nxt_host[s])
-                    props[s].append(tok)
-                    self.ledger.charge_sampled()      # proposal drained d2h
-                    if len(props[s]) < grants[s]:
-                        pending[s].append(tok)
-        return {s: np.asarray(props[s], np.int32) for s in grants}
+                if lens[s]:
+                    self.ledger.charge_chunk("decode", int(lens[s]),
+                                             int(pos0[s]) + int(lens[s]))
+        # The proposal dispatch: feed the rest of every lane's committed
+        # tokens, roll max-needed extra passes in-dispatch. Lanes wanting
+        # fewer proposals than the deepest lane drop their surplus here.
+        rolls = max(grants.values()) - 1
+        tokens = np.zeros((self.num_slots, self.chunk), np.int32)
+        pos0 = np.zeros((self.num_slots,), np.int32)
+        lens = np.zeros((self.num_slots,), np.int32)
+        active = np.zeros((self.num_slots,), bool)
+        for s in grants:
+            n = len(pending[s])
+            tokens[s, :n] = pending[s]
+            pos0[s] = self._depth[s]
+            lens[s] = n
+            active[s] = n > 0
+            self._depth[s] += n
+        props_mat = self._dispatch(tokens, pos0, lens, active, rolls)
+        # Ledger: the dispatch runs 1 + rolls model passes, each
+        # streaming the shared linear weights once; per-lane activation
+        # chunks are charged only while that lane still needs proposals
+        # (its surplus rolls move no host bytes — the whole matrix comes
+        # back in one drain, charged per proposal below).
+        self.ledger.charge_step_weights()
+        props: Dict[int, np.ndarray] = {}
+        for s in grants:
+            if not active[s]:
+                props[s] = np.zeros((0,), np.int32)
+                continue
+            k = grants[s]
+            self.ledger.charge_chunk("decode", int(lens[s]),
+                                     int(pos0[s]) + int(lens[s]))
+            lane = props_mat[s, :k].astype(np.int32)
+            props[s] = lane
+            # Fed-back proposals (all but the last) extend the tracked
+            # tail: they are real cache contents the next _sync matches
+            # against the target's commit.
+            self._tail[s].extend(int(t) for t in lane[:-1])
+            for _ in range(k):
+                self.ledger.charge_sampled()          # proposal drained d2h
+        for i in range(rolls):
+            self.ledger.charge_step_weights()
+            for s in grants:
+                if active[s] and i < grants[s] - 1:
+                    p = int(pos0[s]) + int(lens[s]) + i
+                    self.ledger.charge_chunk("decode", 1, p + 1)
+        return props
 
 
 def make_proposer(mode: str, *, draft_model=None, draft_params=None,
                   num_slots: int = 0, max_seq: int = 0, chunk: int = 0,
                   quant: str = "none", impl: str = "ref",
-                  cache_dtype=jnp.bfloat16):
+                  cache_dtype=jnp.bfloat16, mesh=None):
     """Build the proposer for ``mode`` ("ngram" or "draft")."""
     if mode == "ngram":
         return NGramProposer()
@@ -293,7 +388,7 @@ def make_proposer(mode: str, *, draft_model=None, draft_params=None,
         return DraftModelProposer(draft_model, draft_params,
                                   num_slots=num_slots, max_seq=max_seq,
                                   chunk=chunk, quant=quant, impl=impl,
-                                  cache_dtype=cache_dtype)
+                                  cache_dtype=cache_dtype, mesh=mesh)
     raise ValueError(f"unknown spec mode {mode!r} (choose from "
                      f"{SPEC_MODES})")
 

@@ -113,7 +113,11 @@ class TransferLedger:
 
     def __init__(self, cfg: ModelConfig, quant: str, *,
                  decisions: Optional[Dict[str, bool]] = None,
-                 host_sampling: bool = False, kv_quant: str = "none"):
+                 host_sampling: bool = False, kv_quant: str = "none",
+                 dp: int = 1, tp: int = 1):
+        if dp < 1 or tp < 1:
+            raise ValueError(f"mesh degrees must be >= 1, got dp={dp} "
+                             f"tp={tp}")
         self.cfg = cfg
         # Dense bf16 serving ("none") is accounted at 16-bit weight width —
         # the KernelCall tables only know the llama.cpp transfer formats.
@@ -121,6 +125,12 @@ class TransferLedger:
         self.decisions = decisions
         self.host_sampling = host_sampling
         self.kv_quant = kv_quant
+        # Serving-mesh degrees: every charge keeps recording the
+        # *mesh-total* bytes (so all aggregate views and their committed
+        # baselines are degree-invariant); the per_device_* views divide
+        # each category by the axis it physically shards over.
+        self.dp = dp
+        self.tp = tp
         # Multiplied into every kv_stream charge: the quantized paged
         # arena streams int8 codes + fp16 scales instead of bf16 pages.
         self._kv_stream_scale = kv_quant_stream_scale(cfg, kv_quant)
@@ -292,6 +302,57 @@ class TransferLedger:
         n = max(self.tokens["decode"], 1)
         return (self.total(H2D) + self.total(D2H)) / n
 
+    # -- per-device views (serving mesh accounting) ----------------------
+    def device_share(self, category: str) -> float:
+        """Fraction of a category's mesh-total bytes one device moves.
+
+        ``weights`` shard over the 'model' axis (each device streams its
+        out-feature slice of every linear, replicated across 'data'
+        replicas), so its share is ``1/tp``. Every other category —
+        token ids, the per-slot KV stream, activation staging, output
+        drains, sampled ids/logit rows, block-table uploads, and arena
+        growth — follows the slots, which partition over 'data': one
+        replica moves its slots' share ``1/dp`` and the 'model' axis
+        replicates it. Summing a category's per-device bytes over the
+        axis it shards on therefore recovers the mesh total exactly
+        (the closure property pinned in tests)."""
+        return 1.0 / self.tp if category == "weights" else 1.0 / self.dp
+
+    def per_device_breakdown(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        """Per-device {phase: {category: {direction: bytes}}} cells."""
+        return {p: {c: {d: b * self.device_share(c)
+                        for d, b in by_dir.items()}
+                    for c, by_dir in cats.items()}
+                for p, cats in self._cells.items()}
+
+    def per_device_phase_bytes(self, phase: str) -> Dict[str, float]:
+        """{h2d, d2h} totals one device moves for a phase."""
+        out = {H2D: 0.0, D2H: 0.0}
+        for cat, by_dir in self._cells.get(phase, {}).items():
+            share = self.device_share(cat)
+            for d, b in by_dir.items():
+                if d in out:
+                    out[d] += b * share
+        return out
+
+    def per_device_total(self, direction: str) -> float:
+        """Bytes one device moves in ``direction`` across all phases."""
+        return sum(self.per_device_phase_bytes(p)[direction]
+                   for p in self._cells)
+
+    def per_device_weight_stream_bytes_per_token(self) -> float:
+        """One device's linear weight-stream bytes per generated token —
+        the tensor-parallel scaling headline: the stream divides by tp
+        while the (replicated-per-replica) token count does not."""
+        return self.weight_stream_bytes_per_token() * self.device_share(
+            "weights")
+
+    def per_device_bytes_per_token(self) -> float:
+        """One device's transferred bytes per generated token."""
+        n = max(self.tokens["decode"], 1)
+        return (self.per_device_total(H2D)
+                + self.per_device_total(D2H)) / n
+
     def load_seconds(self, tm: Optional[TransferModel] = None,
                      coalesced: bool = True) -> Dict[str, float]:
         """Modeled DMA time per phase (Fig. 15 LOAD/DRAIN analog), using
@@ -323,6 +384,14 @@ class TransferLedger:
                         f" | LOAD share {frac*100:5.1f}%"
             lines.append(line)
         lines.append(f"bytes/generated-token: {self.bytes_per_token()/1e6:.3f} MB")
+        if self.dp * self.tp > 1:
+            lines.append(
+                f"per-device (dp={self.dp} tp={self.tp}) "
+                f"bytes/generated-token: "
+                f"{self.per_device_bytes_per_token()/1e6:.3f} MB | "
+                f"weight-stream/token: "
+                f"{self.per_device_weight_stream_bytes_per_token()/1e6:.3f}"
+                f" MB")
         return lines
 
 
@@ -360,6 +429,10 @@ class TransferReport:
     kv_stream_bytes: float = 0.0
     weight_stream_bytes_per_token: float = 0.0
     prefix_hit_tokens: int = 0
+    dp: int = 1
+    tp: int = 1
+    per_device_bytes_per_token: float = 0.0
+    per_device_weight_stream_bytes_per_token: float = 0.0
 
     @classmethod
     def from_ledger(cls, ledger: TransferLedger) -> "TransferReport":
@@ -372,4 +445,9 @@ class TransferReport:
                    kv_stream_bytes=ledger.kv_stream_bytes(),
                    weight_stream_bytes_per_token=(
                        ledger.weight_stream_bytes_per_token()),
-                   prefix_hit_tokens=ledger.prefix_hit_tokens)
+                   prefix_hit_tokens=ledger.prefix_hit_tokens,
+                   dp=ledger.dp, tp=ledger.tp,
+                   per_device_bytes_per_token=(
+                       ledger.per_device_bytes_per_token()),
+                   per_device_weight_stream_bytes_per_token=(
+                       ledger.per_device_weight_stream_bytes_per_token()))

@@ -502,7 +502,7 @@ def _args(**over):
     d = dict(arch="qwen3-0.6b", mode="stream", chunk_size=8, block_size=4,
              num_blocks=0, paged_attn=None, spec="off", spec_k=None,
              spec_draft_model=None, kv_quant="int8", prefix_cache=False,
-             shared_prefix=0)
+             shared_prefix=0, dp=1, tp=1)
     d.update(over)
     return argparse.Namespace(**d)
 

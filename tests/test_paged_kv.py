@@ -157,7 +157,8 @@ def test_paged_arena_lifecycle(gqa_model):
     assert arena.max_blocks == 4 and arena.null_block == 6
     # the layout contract the fused paged-attention kernel consumes
     assert arena.page_layout() == {"block_size": 4, "max_blocks": 4,
-                                   "num_pages": 7, "null_block": 6,
+                                   "num_pages": 7, "local_pages": 7,
+                                   "data_shards": 1, "null_block": 6,
                                    "kv_quant": "none"}
     s0 = arena.alloc_slot(2)
     s1 = arena.alloc_slot(3)

@@ -1,0 +1,133 @@
+"""Sharded == single-device serving differentials (forced host devices).
+
+The exactness contract of the serving mesh: for GQA and MLA attention,
+through both the fused paged kernel and the dense-gather oracle, a
+1x2 (TP) and 2x2 (DP x TP) mesh must generate *token-identical* output
+versus the unsharded engine, with the unified step compiling exactly
+once. conftest.py forbids a global XLA_FLAGS (benches need the real
+single CPU device), so the matrix runs in a subprocess that forces
+``--xla_force_host_platform_device_count=4`` before importing jax, and
+amortizes one model build over every (paged_attn, mesh) cell.
+
+The subprocess also pins two ledger properties on live runs: the
+aggregate (mesh-total) cells are degree-invariant — committed bench
+baselines cannot move when a mesh is enabled — and the per-device cells
+close (per-device x shard-count == total, per category).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_WORKER = r"""
+import json, os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+from repro.configs.registry import get_config
+from repro.models.api import build_model
+from repro.runtime.engine import ServingEngine
+from repro.runtime.request import Request, SamplingParams
+
+arch = sys.argv[1]
+cfg = get_config(arch).reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+
+def make_requests():
+    rng = np.random.RandomState(3)
+    return [Request(rid=i, tokens=rng.randint(0, cfg.vocab_size, 6 + i),
+                    max_new_tokens=3,
+                    sampling=SamplingParams(temperature=0.0))
+            for i in range(3)]
+
+
+def run(attn, dp, tp):
+    mesh = None
+    if dp * tp > 1:
+        devs = np.array(jax.devices()[: dp * tp]).reshape(dp, tp)
+        mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    eng = ServingEngine(model, params, num_slots=2, max_seq=32,
+                        chunk_size=4, block_size=4, num_blocks=7,
+                        paged_attn=attn, mesh=mesh)
+    rep = eng.serve(make_requests(), seed=0, realtime=False)
+    led = rep.ledger
+    return {
+        "tokens": [[int(t) for t in s.generated] for s in rep.sequences],
+        "compiles": rep.step_compiles,
+        "bytes_per_token": led.bytes_per_token(),
+        "breakdown": led.breakdown(),
+        "per_device_breakdown": led.per_device_breakdown(),
+        "local_pages": eng.arena.page_layout()["local_pages"],
+        "num_pages": eng.arena.page_layout()["num_pages"],
+        "kv_read": rep.stats.paged_kv_read_bytes,
+        "kv_read_dev": rep.stats.paged_kv_read_bytes_per_device,
+    }
+
+
+out = {}
+for attn in ("fused", "ref"):
+    for dp, tp in ((1, 1), (1, 2), (2, 2)):
+        out[f"{attn}/{dp}x{tp}"] = run(attn, dp, tp)
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _run_matrix(arch, tmp_path):
+    worker = tmp_path / "worker.py"
+    worker.write_text(_WORKER)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, str(worker), arch],
+                          capture_output=True, text=True, timeout=1800,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-v3-671b"],
+                         ids=["gqa", "mla"])
+def test_sharded_serving_token_identical(arch, tmp_path):
+    res = _run_matrix(arch, tmp_path)
+    for attn in ("fused", "ref"):
+        base = res[f"{attn}/1x1"]
+        for mesh in ("1x2", "2x2"):
+            got = res[f"{attn}/{mesh}"]
+            assert got["tokens"] == base["tokens"], \
+                f"{attn}/{mesh} diverged from single-device"
+            assert got["compiles"] == 1, \
+                f"{attn}/{mesh} re-jitted: {got['compiles']} compiles"
+            # Mesh-total ledger cells are degree-invariant.
+            assert got["breakdown"] == base["breakdown"]
+            assert got["bytes_per_token"] == \
+                pytest.approx(base["bytes_per_token"])
+            # The fused kernel's modeled read traffic is mesh-blind in
+            # aggregate; the per-device figure is the busiest replica.
+            assert got["kv_read"] == pytest.approx(base["kv_read"])
+        assert base["compiles"] == 1
+
+    # Per-device ledger closure on a live 2x2 run.
+    got = res["fused/2x2"]
+    for phase, cats in got["breakdown"].items():
+        for cat, by_dir in cats.items():
+            shards = 2  # dp == tp == 2: every category halves
+            for d, b in by_dir.items():
+                assert got["per_device_breakdown"][phase][cat][d] * shards \
+                    == pytest.approx(b)
+
+    # DP pages accounting: 8 physical pages split across 2 replicas, and
+    # the busiest replica's modeled read share is at most the total.
+    assert res["fused/2x2"]["num_pages"] == 8
+    assert res["fused/2x2"]["local_pages"] == 4
+    assert res["fused/1x1"]["local_pages"] == 8
+    for key in ("fused/1x2", "fused/2x2", "ref/2x2"):
+        assert 0 < res[key]["kv_read_dev"] <= res[key]["kv_read"]
+    # Under DP=2 the ref path's dense gather halves per device exactly.
+    assert res["ref/2x2"]["kv_read_dev"] * 2 == \
+        pytest.approx(res["ref/2x2"]["kv_read"])
