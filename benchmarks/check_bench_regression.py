@@ -7,21 +7,38 @@ fails (exit 1) when any gated metric regresses beyond its tolerance.
     python benchmarks/check_bench_regression.py CURRENT.json BASELINE.json
 
 Baseline format — per metric either a bare number (shorthand: lower is
-better, 10% tolerance) or an object:
+better, 10% tolerance, kind "exact") or an object:
 
     {"metrics": {
         "bytes_per_token": {"value": 884943.0, "max_regress_pct": 10},
-        "p50_latency_s":   {"value": 0.061, "max_regress_pct": 75,
+        "p50_latency_s":   {"value": 0.061, "kind": "time",
+                            "max_regress_pct": 75,
                             "note": "wall clock: runner-speed headroom"},
-        "equal_bytes_concurrency_gain": {"value": 3.5, "direction":
-                            "higher", "max_regress_pct": 10}}}
+        "equal_bytes_concurrency_gain": {"value": 3.5, "kind": "ratio",
+                            "direction": "higher", "max_regress_pct": 10}}}
 
-Deterministic ledger/model metrics carry the tight 10% gate (these are
-what an accidental re-introduction of pow2 padding or per-slot weight
-restreaming would move); wall-clock metrics get explicit headroom in the
-baseline because CI runner speed is not the thing under test. A metric
-present in the baseline but missing from the current run is a failure —
-silently dropping a gated metric must not pass.
+Every metric carries a ``kind`` tag describing WHY its tolerance is what
+it is:
+
+  * ``"exact"`` (the default) — modeled-ledger / counter metrics that are
+    bit-deterministic on CPU (byte totals, compile counts, agreement
+    rates). These are what an accidental re-introduction of pow2 padding
+    or per-slot weight restreaming would move, so they keep tight
+    tolerances.
+  * ``"ratio"`` — dimensionless A/B quotients of two deterministic
+    measurements taken in the same run (spec amortization, sharding
+    factors, concurrency gains). Also deterministic; the tag just records
+    that the gate is scale-free.
+  * ``"time"`` — wall-clock measurements (latency percentiles,
+    throughput). CI runner speed is NOT the thing under test, so time
+    metrics must carry wide headroom: the checker enforces a minimum
+    tolerance floor of ``TIME_MIN_TOL_PCT`` (50%) on them — a time-kind
+    metric declaring a tighter bound is widened to the floor, and the
+    effective tolerance is what gets printed and applied. Only time-kind
+    metrics get this widening; exact/ratio tolerances are used verbatim.
+
+A metric present in the baseline but missing from the current run is a
+failure — silently dropping a gated metric must not pass.
 
 Refresh a baseline deliberately by re-running the bench with ``--json``
 and copying the values in (see benchmarks/baselines/README.md).
@@ -39,23 +56,36 @@ def load_metrics(path: str) -> dict:
     return data.get("metrics", data)
 
 
+# Minimum tolerance (pct) applied to kind="time" metrics: wall-clock
+# gates tighter than this are runner-speed lotteries, not regressions.
+TIME_MIN_TOL_PCT = 50.0
+KINDS = ("exact", "ratio", "time")
+
+
 def norm_spec(spec) -> dict:
     if isinstance(spec, dict):
-        return {"value": float(spec["value"]),
-                "max_regress_pct": float(spec.get("max_regress_pct", 10.0)),
-                "direction": spec.get("direction", "lower")}
+        kind = spec.get("kind", "exact")
+        if kind not in KINDS:
+            raise ValueError(f"unknown metric kind {kind!r} "
+                             f"(expected one of {KINDS})")
+        pct = float(spec.get("max_regress_pct", 10.0))
+        if kind == "time":
+            pct = max(pct, TIME_MIN_TOL_PCT)
+        return {"value": float(spec["value"]), "max_regress_pct": pct,
+                "direction": spec.get("direction", "lower"), "kind": kind}
     return {"value": float(spec), "max_regress_pct": 10.0,
-            "direction": "lower"}
+            "direction": "lower", "kind": "exact"}
 
 
 def check(current: dict, baseline: dict):
-    """Returns (rows, failures). A row: (name, base, cur, limit, ok)."""
+    """Returns (rows, failures). A row: (name, base, cur, limit, ok,
+    kind) — ``limit`` already reflects the time-kind tolerance floor."""
     rows, failures = [], []
     for name, raw in sorted(baseline.items()):
         spec = norm_spec(raw)
         base, pct = spec["value"], spec["max_regress_pct"]
         if name not in current:
-            rows.append((name, base, None, None, False))
+            rows.append((name, base, None, None, False, spec["kind"]))
             failures.append(f"{name}: missing from current run")
             continue
         cur = float(current[name])
@@ -65,11 +95,11 @@ def check(current: dict, baseline: dict):
         else:
             limit = base * (1.0 + pct / 100.0)
             ok = cur <= limit
-        rows.append((name, base, cur, limit, ok))
+        rows.append((name, base, cur, limit, ok, spec["kind"]))
         if not ok:
             failures.append(
                 f"{name}: {cur:.6g} regressed past {limit:.6g} "
-                f"(baseline {base:.6g}, tol {pct:.0f}%, "
+                f"(baseline {base:.6g}, tol {pct:.0f}% [{spec['kind']}], "
                 f"{spec['direction']} is better)")
     return rows, failures
 
@@ -83,11 +113,12 @@ def main() -> int:
     baseline = load_metrics(args.baseline)
     rows, failures = check(current, baseline)
     width = max((len(r[0]) for r in rows), default=10)
-    for name, base, cur, limit, ok in rows:
+    for name, base, cur, limit, ok, kind in rows:
         cur_s = f"{cur:.6g}" if cur is not None else "MISSING"
         lim_s = f"{limit:.6g}" if limit is not None else "-"
         print(f"{'PASS' if ok else 'FAIL'}  {name:<{width}}  "
-              f"base={base:.6g}  cur={cur_s}  limit={lim_s}")
+              f"kind={kind:<5}  base={base:.6g}  cur={cur_s}  "
+              f"limit={lim_s}")
     if failures:
         print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
         for f in failures:

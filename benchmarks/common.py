@@ -30,3 +30,11 @@ def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1, **kw):
 def vs_paper(ours: float, paper: float) -> str:
     err = (ours - paper) / paper * 100 if paper else float("nan")
     return f"ours={ours:.3g} paper={paper:.3g} err={err:+.1f}%"
+
+
+def fmt_percentiles(pcts: dict, unit: str = "ms") -> str:
+    """Render a ``{"p50": seconds, ...}`` dict (the telemetry
+    ``LogHistogram.percentiles`` shape) as ``p50_ms=12 p99_ms=340``."""
+    scale = {"s": 1.0, "ms": 1e3, "us": 1e6}[unit]
+    return " ".join(f"{k}_{unit}={v * scale:.0f}"
+                    for k, v in sorted(pcts.items()))

@@ -72,6 +72,7 @@ from repro.configs.registry import get_config
 from repro.models.api import build_model
 from repro.runtime.engine import Engine, ServingEngine
 from repro.runtime.request import Request, SamplingParams
+from repro.runtime.telemetry import serve_report_lines
 
 
 def make_extras(cfg, batch: int):
@@ -165,11 +166,10 @@ def run_stream(cfg, model, params, args) -> None:
         spec=args.spec, spec_k=args.spec_k or 4,
         spec_draft_model=draft_model, spec_draft_params=draft_params,
         prefix_cache=args.prefix_cache, kv_quant=args.kv_quant,
-        host_sampling=args.host_sampling, mesh=build_mesh(args))
+        host_sampling=args.host_sampling, mesh=build_mesh(args),
+        telemetry=True)
 
     report = engine.serve(reqs, seed=args.seed)
-    st = report.stats
-    pct = report.latency_percentiles((50, 90, 99))
     arena_desc = f"slots={args.slots}"
     if engine.paged:
         arena_desc += (f" paged[{engine.arena.num_blocks}x"
@@ -180,61 +180,23 @@ def run_stream(cfg, model, params, args) -> None:
     print(f"arch={cfg.name} quant={args.quant} stream={args.requests} reqs "
           f"({args.arrival}) {arena_desc} "
           f"prefill=chunked[{engine.chunk_size}] gen={args.gen}")
-    print(f"  completed {report.sched.completed}/{args.requests} | "
-          f"slot reuses {report.sched.slot_reuses} | "
-          f"mean occupancy {report.sched.mean_occupancy:.2f}/{args.slots} "
-          f"(max {report.sched.max_occupancy}) | "
-          f"step compiles {report.step_compiles}")
-    print(f"  chunk scheduling: {report.sched.prefill_chunks} prompt "
-          f"chunks | {report.sched.deferred_feeds} budget-deferred "
-          f"feeds | {st.prefill_tokens} prompt tokens streamed")
-    if engine.paged:
-        print(f"  paged arena: block reissues "
-              f"{engine.arena.allocator.reissues} | preemptions "
-              f"{report.sched.preemptions} | resident/token "
-              f"{st.resident_bytes_per_token:.0f} B | peak resident "
-              f"{st.peak_resident_bytes/1e6:.2f} MB")
-    if engine.prefix_cache:
-        pc = engine.arena.prefix_cache
-        print(f"  prefix cache: {st.prefix_hits}/{report.sched.admitted} "
-              f"admissions hit | {st.prefix_hit_tokens} prompt tokens "
-              f"from shared pages | {st.cow_splits} CoW splits | "
-              f"{len(pc)} cached chains ({pc.evictions} evicted)")
-    if engine.spec != "off":
-        print(f"  speculative[{engine.spec} k={engine.spec_k}]: "
-              f"accept {st.spec_accepted}/{st.spec_proposed} "
-              f"({st.spec_accept_rate*100:.0f}%) | rolled back "
-              f"{st.spec_rolled_back} tok | steps/token "
-              f"{st.steps_per_token:.3f} | weight-stream/token "
-              f"{st.transfers.weight_stream_bytes_per_token/1e6:.3f} MB | "
-              f"lanes trimmed {report.sched.spec_lanes_trimmed}")
-        if st.draft_transfers is not None:
-            print(f"  draft account: {st.draft_transfers.bytes_per_token/1e6:.3f}"
-                  f" MB/proposal ({engine._proposer.steps} draft steps)")
-    print(f"  prefill {st.prefill_s*1e3:.1f} ms ({st.prefill_tokens} tok) | "
-          f"decode {st.decode_s*1e3:.1f} ms ({st.decode_tokens} tok, "
-          f"{st.decode_tok_per_s:.1f} tok/s) | "
-          f"throughput {report.throughput_tok_s:.1f} tok/s | "
-          f"arena {st.cache_bytes/1e6:.1f} MB")
-    print(f"  latency p50 {pct[50]*1e3:.0f} ms | p90 {pct[90]*1e3:.0f} ms | "
-          f"p99 {pct[99]*1e3:.0f} ms")
-    if engine.mesh is not None:
-        tr = st.transfers
-        line = (f"  mesh dp={engine.dp} tp={engine.tp}: per-device "
-                f"bytes/token {tr.per_device_bytes_per_token/1e6:.3f} MB"
-                f" | per-device weight-stream/token "
-                f"{tr.per_device_weight_stream_bytes_per_token/1e6:.3f}"
-                f" MB")
-        if engine.paged:
-            line += (f" | per-device paged-read/token "
-                     f"{(st.paged_kv_read_bytes_per_device / max(st.decode_tokens, 1))/1e6:.3f} MB")
-        print(line)
-    print("  transfer ledger (host<->device):")
-    exec_s = {"prefill": st.prefill_s, "decode": st.decode_s}
-    for line in report.ledger.summary_lines(exec_s):
-        print(f"    {line}")
+    # ONE formatter emits every report line (scheduler, arena, spec,
+    # prefix, timing, percentiles, mesh, ledger, bottleneck) — the
+    # hand-rolled print block and TransferReport.summary_lines used to
+    # drift apart; see telemetry.serve_report_lines.
+    for line in serve_report_lines(engine, report,
+                                   total_requests=args.requests):
+        print(f"  {line}")
     first = report.sequences[0]
     print(f"  first request tokens: {first.generated[:8]}")
+    if args.metrics_out:
+        report.timeline.write_metrics_jsonl(args.metrics_out)
+        print(f"  metrics: wrote {len(report.timeline.events)} step "
+              f"events to {args.metrics_out}")
+    if args.trace:
+        report.timeline.write_chrome_trace(args.trace)
+        print(f"  trace: wrote Perfetto/Chrome trace to {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 def run_batch(cfg, model, params, args) -> None:
@@ -303,6 +265,12 @@ def validate_args(ap, args) -> None:
                      "quantize-on-insert path")
     if args.shared_prefix < 0:
         ap.error("--shared-prefix must be >= 0")
+    # getattr: test helpers validate partial Namespaces without the
+    # export flags.
+    if (getattr(args, "metrics_out", None) or getattr(args, "trace", None)) \
+            and args.mode != "stream":
+        ap.error("--metrics-out/--trace require --mode stream (telemetry "
+                 "instruments the continuous-batching step loop)")
     if args.paged_attn and not args.block_size:
         ap.error(f"--paged-attn {args.paged_attn} requires a paged arena "
                  "(--block-size); the contiguous slot arena has no block "
@@ -476,6 +444,14 @@ def main() -> None:
     ap.add_argument("--host-sampling", action="store_true",
                     help="ledger models llama.cpp-style host sampling "
                          "(full logit rows drained per step)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
+                    help="write the per-step telemetry series (JSONL: "
+                         "meta/admit/preempt/step/summary events — see "
+                         "docs/observability.md) to this file")
+    ap.add_argument("--trace", default=None, metavar="FILE.json",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-slot phase spans + ledger byte counter "
+                         "tracks); open it at https://ui.perfetto.dev")
     args = ap.parse_args()
     validate_args(ap, args)
 

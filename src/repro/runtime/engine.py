@@ -74,13 +74,67 @@ from repro.runtime import sampling, speculative
 from repro.runtime.kvcache import KV_QUANT_MODES, KVArena, PagedKVArena
 from repro.runtime.request import Request, SamplingParams, SeqState, Sequence
 from repro.runtime.scheduler import Scheduler, SchedulerStats
+from repro.runtime.telemetry import StepTimeline
 from repro.runtime.transfers import TransferLedger, TransferReport
 
 
 @dataclasses.dataclass
+class SpecCounters:
+    """Speculative-decoding tallies: proposal lanes fed to the verifier,
+    lanes accepted by verification, and rejected KV positions rolled
+    back (zeroed + block-trimmed)."""
+
+    proposed: int = 0
+    accepted: int = 0
+    rolled_back: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        """Plain-dict view (telemetry counters / bench emission)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PrefixCounters:
+    """Prefix-sharing tallies: admissions that mapped a cached prefix,
+    prompt positions satisfied from shared pages (never streamed or
+    computed), and copy-on-write block splits taken before a write."""
+
+    hits: int = 0
+    hit_tokens: int = 0
+    cow_splits: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        """Plain-dict view (telemetry counters / bench emission)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PagedReadCounters:
+    """Paged decode attention KV *read* traffic, accumulated per step
+    from the engine's real tables/positions (same modeled-from-real-
+    schedule philosophy as the transfer ledger): the fused kernel
+    fetches each slot's live blocks (clamped index map — O(live
+    tokens)); the ref gather materializes every slot's full-table-width
+    view (O(arena)). ``read_bytes_per_device`` is the busiest 'data'
+    replica's share under a serving mesh — each replica walks only its
+    own slots' tables, so it is the max over replicas, not total/dp
+    (equal to the total when dp == 1); the DP split only, the 'model'
+    split of GQA pages is a further /tp not modeled here."""
+
+    read_bytes: float = 0.0
+    read_bytes_per_device: float = 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        """Plain-dict view (telemetry counters / bench emission)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class GenStats:
-    """Aggregate counters for one generation/serve run (timing, token
-    counts, byte accounting, speculative and prefix-sharing tallies)."""
+    """Aggregate counters for one generation/serve run: timing and token
+    counts inline, per-feature tallies grouped into documented
+    sub-structs (``spec``, ``prefix``, ``paged``) with the historical
+    flat names kept as read-write property aliases."""
 
     prefill_s: float = 0.0
     decode_s: float = 0.0
@@ -92,32 +146,114 @@ class GenStats:
     peak_resident_bytes: float = 0.0    # max arena bytes pinned by live seqs
     resident_bytes_sum: float = 0.0     # per-step resident-bytes accumulator
     live_tokens_sum: int = 0            # per-step live-cache-token accumulator
-    # Paged decode attention KV *read* traffic, accumulated per step from
-    # the engine's real tables/positions (same modeled-from-real-schedule
-    # philosophy as the transfer ledger): the fused kernel fetches each
-    # slot's live blocks (clamped index map — O(live tokens)); the ref
-    # gather materializes every slot's full-table-width view (O(arena)).
-    paged_kv_read_bytes: float = 0.0
-    # Busiest 'data' replica's share of the above under a serving mesh —
-    # each replica walks only its own slots' tables, so the per-device
-    # figure is the max over replicas, not total/dp (equal to the total
-    # when dp == 1). Accounts the DP split only; the 'model' split of
-    # GQA pages is a further /tp not modeled here.
-    paged_kv_read_bytes_per_device: float = 0.0
     steps: int = 0                  # unified steps executed
-    # Speculative decoding: proposal lanes fed / accepted by verification
-    # / rejected KV positions rolled back (zeroed + block-trimmed).
-    spec_proposed: int = 0
-    spec_accepted: int = 0
-    spec_rolled_back: int = 0
-    # Prefix sharing: admissions that mapped a cached prefix / prompt
-    # positions satisfied from shared pages (never streamed or computed)
-    # / copy-on-write block splits taken before a write.
-    prefix_hits: int = 0
-    prefix_hit_tokens: int = 0
-    cow_splits: int = 0
+    spec: SpecCounters = dataclasses.field(default_factory=SpecCounters)
+    prefix: PrefixCounters = dataclasses.field(
+        default_factory=PrefixCounters)
+    paged: PagedReadCounters = dataclasses.field(
+        default_factory=PagedReadCounters)
     transfers: Optional[TransferReport] = None
     draft_transfers: Optional[TransferReport] = None  # spec="draft" account
+
+    # -- legacy flat aliases (pre-grouping attribute names) --------------
+    @property
+    def spec_proposed(self) -> int:
+        """Alias of ``spec.proposed`` (historical flat name)."""
+        return self.spec.proposed
+
+    @spec_proposed.setter
+    def spec_proposed(self, v: int) -> None:
+        """Write through to ``spec.proposed``."""
+        self.spec.proposed = v
+
+    @property
+    def spec_accepted(self) -> int:
+        """Alias of ``spec.accepted`` (historical flat name)."""
+        return self.spec.accepted
+
+    @spec_accepted.setter
+    def spec_accepted(self, v: int) -> None:
+        """Write through to ``spec.accepted``."""
+        self.spec.accepted = v
+
+    @property
+    def spec_rolled_back(self) -> int:
+        """Alias of ``spec.rolled_back`` (historical flat name)."""
+        return self.spec.rolled_back
+
+    @spec_rolled_back.setter
+    def spec_rolled_back(self, v: int) -> None:
+        """Write through to ``spec.rolled_back``."""
+        self.spec.rolled_back = v
+
+    @property
+    def prefix_hits(self) -> int:
+        """Alias of ``prefix.hits`` (historical flat name)."""
+        return self.prefix.hits
+
+    @prefix_hits.setter
+    def prefix_hits(self, v: int) -> None:
+        """Write through to ``prefix.hits``."""
+        self.prefix.hits = v
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Alias of ``prefix.hit_tokens`` (historical flat name)."""
+        return self.prefix.hit_tokens
+
+    @prefix_hit_tokens.setter
+    def prefix_hit_tokens(self, v: int) -> None:
+        """Write through to ``prefix.hit_tokens``."""
+        self.prefix.hit_tokens = v
+
+    @property
+    def cow_splits(self) -> int:
+        """Alias of ``prefix.cow_splits`` (historical flat name)."""
+        return self.prefix.cow_splits
+
+    @cow_splits.setter
+    def cow_splits(self, v: int) -> None:
+        """Write through to ``prefix.cow_splits``."""
+        self.prefix.cow_splits = v
+
+    @property
+    def paged_kv_read_bytes(self) -> float:
+        """Alias of ``paged.read_bytes`` (historical flat name)."""
+        return self.paged.read_bytes
+
+    @paged_kv_read_bytes.setter
+    def paged_kv_read_bytes(self, v: float) -> None:
+        """Write through to ``paged.read_bytes``."""
+        self.paged.read_bytes = v
+
+    @property
+    def paged_kv_read_bytes_per_device(self) -> float:
+        """Alias of ``paged.read_bytes_per_device`` (historical flat
+        name)."""
+        return self.paged.read_bytes_per_device
+
+    @paged_kv_read_bytes_per_device.setter
+    def paged_kv_read_bytes_per_device(self, v: float) -> None:
+        """Write through to ``paged.read_bytes_per_device``."""
+        self.paged.read_bytes_per_device = v
+
+    def to_dict(self) -> Dict:
+        """Scalar counter snapshot: timing/token fields inline plus the
+        grouped sub-structs under their group keys — the shared shape
+        telemetry counters and bench emission read from (transfer
+        reports are separate frozen views, not repeated here)."""
+        return {
+            "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+            "tokens_in": self.tokens_in, "tokens_out": self.tokens_out,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "cache_bytes": self.cache_bytes,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "steps": self.steps,
+            "spec": self.spec.to_dict(),
+            "prefix": self.prefix.to_dict(),
+            "paged": self.paged.to_dict(),
+        }
 
     @property
     def steps_per_token(self) -> float:
@@ -170,6 +306,9 @@ class ServeReport:
     sched: SchedulerStats
     step_compiles: int              # decode-step compilations (1 == no re-jit)
     ledger: Optional[TransferLedger] = None   # live ledger (summary_lines)
+    # Telemetry StepTimeline (engine telemetry=True): per-step events,
+    # streaming latency histograms, trace/metrics exporters.
+    timeline: Optional[object] = None
 
     @property
     def transfers(self) -> TransferReport:
@@ -210,6 +349,7 @@ class ServingEngine:
                  mesh=None,
                  offload_decisions: Optional[Dict[str, bool]] = None,
                  host_sampling: bool = False, donate_cache: bool = True,
+                 telemetry: bool = False,
                  cache_dtype=jnp.bfloat16):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -339,6 +479,12 @@ class ServingEngine:
                                host_sampling=host_sampling,
                                kv_quant=kv_quant, dp=self.dp, tp=self.tp)
         self._vlm = model.cfg.family == "vlm"
+        # Telemetry: when enabled, serve() builds a StepTimeline per run
+        # (strictly host-side — never touches a traced value, so the
+        # step_compiles == 1 contract and token streams are unchanged).
+        self.telemetry = telemetry
+        self._timeline = None
+        self._run_cow0 = 0
         self._fresh_arena_sched()
         self._step_compiles = 0
 
@@ -719,7 +865,8 @@ class ServingEngine:
         nxt_host = np.asarray(nxt)            # blocks until step completes
         t_end = time.perf_counter()
         now = t_end - t0
-        self._step_compiles += self._jit_cache_size() - before
+        dcomp = self._jit_cache_size() - before
+        self._step_compiles += dcomp
 
         pre_toks = sum(n for s, n in feeds.items()
                        if self.sched.active[s].state is SeqState.PREFILL)
@@ -765,15 +912,20 @@ class ServingEngine:
             stats.paged_kv_read_bytes += float(per_rep.sum()) * bb
             stats.paged_kv_read_bytes_per_device += float(per_rep.max()) * bb
         tok_bytes = 0.0 if self.paged else self.arena.token_bytes()
+        tl = self._timeline
+        slot_mix = [] if tl is not None else None
         for slot, seq in list(self.sched.active.items()):
             n = feeds[slot]
             if seq.state is SeqState.PREFILL:
                 if n == 0:
+                    if slot_mix is not None:      # deferred: fed nothing
+                        slot_mix.append((slot, seq.rid, "prefill", 0, 0))
                     continue                  # budget-starved this step
                 stats.prefill_tokens += n
                 ledger.charge_chunk("prefill", n, seq.fed + n)
                 if tok_bytes:
                     ledger.charge_cache_growth("prefill", n * tok_bytes)
+                first_tok = 0
                 if seq.feed_chunk(n):
                     seq.start_decode()        # this chunk sampled token 0
                     if self.prefix_cache:
@@ -785,6 +937,14 @@ class ServingEngine:
                     ledger.charge_sampled()
                     seq.record_token(int(nxt_host[slot]), now)
                     stats.decode_tokens += 1
+                    first_tok = 1
+                    if tl is not None:
+                        tl.on_token(seq.rid, now, ttft_s=seq.ttft_s)
+                        if seq.done:
+                            tl.on_done(seq.rid, seq.latency_s)
+                if slot_mix is not None:
+                    slot_mix.append((slot, seq.rid, "prefill", n,
+                                     first_tok))
             else:
                 m = n                         # 1 committed + kp proposals
                 kp = int(prop_lens[slot])
@@ -802,8 +962,14 @@ class ServingEngine:
                 for t in emitted:
                     if seq.done:
                         break                 # generation budget exhausted
+                    first = seq.t_first_token is None
                     seq.record_token(t, now)
                     r += 1
+                    if tl is not None:
+                        tl.on_token(seq.rid, now,
+                                    ttft_s=seq.ttft_s if first else None)
+                if tl is not None and seq.done:
+                    tl.on_done(seq.rid, seq.latency_s)
                 if tok_bytes:
                     ledger.charge_cache_growth("decode", r * tok_bytes)
                 # Host sampling would drain every fed lane's logit row
@@ -817,8 +983,41 @@ class ServingEngine:
                     self.arena.rollback(slot, int(pos0[slot]) + r, m - r,
                                         C)
                     stats.spec_rolled_back += m - r
+                if slot_mix is not None:
+                    slot_mix.append((slot, seq.rid,
+                                     "verify" if kp else "decode", m, r))
         stats.steps += 1
         self.sched.record_step()
+        if tl is not None:
+            # Cumulative run-relative counters; the timeline diffs them
+            # into per-step deltas (sums telescope back to run totals).
+            counters = {
+                "steps": float(stats.steps),
+                "prefill_tokens": float(stats.prefill_tokens),
+                "decode_tokens": float(stats.decode_tokens),
+                "spec_proposed": float(stats.spec.proposed),
+                "spec_accepted": float(stats.spec.accepted),
+                "spec_rolled_back": float(stats.spec.rolled_back),
+                "prefix_hits": float(stats.prefix.hits),
+                "prefix_hit_tokens": float(stats.prefix.hit_tokens),
+                "cow_splits": float(self.arena.cow_splits
+                                    - self._run_cow0)
+                if self.paged else 0.0,
+                "preemptions": float(self.sched.stats.preemptions),
+                "deferred_feeds": float(self.sched.stats.deferred_feeds),
+                "prefill_chunks": float(self.sched.stats.prefill_chunks),
+                "paged_kv_read_bytes": stats.paged.read_bytes,
+            }
+            if self._proposer is not None:
+                counters["draft_steps"] = float(
+                    getattr(self._proposer, "steps", 0))
+            tl.record_step(
+                t_start=t_step - t0, t_end=now,
+                occupancy=len(self.sched.active), compiles=dcomp,
+                counters=counters,
+                gauges={"resident_bytes": float(resident),
+                        "queue_len": float(len(self.sched.queue))},
+                slots=slot_mix)
         self.sched.retire(self.arena.free)
 
     def _jit_cache_size(self) -> int:
@@ -869,6 +1068,21 @@ class ServingEngine:
         # The arena (and its prefix cache) outlives serve() runs — a warm
         # cache is the point — so per-run CoW counts are deltas.
         cow0 = self.arena.cow_splits if self.paged else 0
+        self._run_cow0 = cow0
+        tl = None
+        if self.telemetry:
+            # Created AFTER the proposer's reset_run so the draft tap
+            # lands on this run's fresh draft ledger; detached again in
+            # finalize() before the report is assembled.
+            tl = StepTimeline(
+                ledger,
+                draft_ledger=getattr(self._proposer, "ledger", None),
+                meta={"arch": self.model.cfg.name, "quant": self.quant,
+                      "slots": self.num_slots, "chunk": self.chunk_size,
+                      "dp": self.dp, "tp": self.tp, "spec": self.spec,
+                      "kv_quant": self.kv_quant, "paged": self.paged})
+            self._timeline = tl
+            self.sched.telemetry = tl
         key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
 
@@ -899,6 +1113,10 @@ class ServingEngine:
             key, sub = jax.random.split(key)
             self._step_once(sub, stats, ledger, t0)
 
+        if tl is not None:
+            tl.finalize(time.perf_counter() - t0)
+            self._timeline = None
+            self.sched.telemetry = None
         stats.cache_bytes = self.arena.nbytes()
         if self.paged:
             stats.cow_splits = self.arena.cow_splits - cow0
@@ -912,7 +1130,8 @@ class ServingEngine:
         seqs = sorted(self.sched.finished, key=lambda s: order[s.rid])
         return ServeReport(stats=stats, sequences=seqs,
                            sched=self.sched.stats,
-                           step_compiles=self._step_compiles, ledger=ledger)
+                           step_compiles=self._step_compiles,
+                           ledger=ledger, timeline=tl)
 
 
 class Engine:

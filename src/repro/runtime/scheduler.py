@@ -48,6 +48,7 @@ class SchedulerStats:
     completed: int = 0
     preemptions: int = 0            # paged arena: preempt-to-queue events
     slot_reuses: int = 0            # admissions into a previously used slot
+    queue_wait_sum: float = 0.0     # sum of per-admission queue waits (s)
     occupancy_sum: float = 0.0      # sum over steps of active-slot count
     max_occupancy: int = 0          # peak concurrent sequences
     steps: int = 0
@@ -69,6 +70,14 @@ class SchedulerStats:
     def mean_occupancy(self) -> float:
         """Mean active-slot count per executed step."""
         return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    @property
+    def mean_queue_wait(self) -> float:
+        """Mean seconds an admission spent between arrival and its slot
+        (re-admissions after preemption count from their original
+        arrival — the request kept waiting)."""
+        return self.queue_wait_sum / self.admitted if self.admitted \
+            else 0.0
 
     @property
     def replica_mean_occupancy(self) -> List[float]:
@@ -98,6 +107,9 @@ class Scheduler:
         self.finished: List[Sequence] = []
         self._ever_used: set = set()
         self._admit_counter = 0
+        # Telemetry StepTimeline (or None): admissions and preemptions
+        # are reported through it when the engine enables telemetry.
+        self.telemetry = None
         self.stats = SchedulerStats(
             dp=dp, replica_occupancy_sums=[0.0] * dp,
             replica_max_occupancy=[0] * dp)
@@ -146,6 +158,12 @@ class Scheduler:
                 self.stats.slot_reuses += 1
             self._ever_used.add(slot)
             self.stats.admitted += 1
+            # Queue age: arrival (clamped for virtual replay, where
+            # admission can precede the nominal arrival) to slot grant.
+            wait = max(now - seq.req.arrival_s, 0.0)
+            self.stats.queue_wait_sum += wait
+            if self.telemetry is not None:
+                self.telemetry.on_admit(seq.rid, now, wait)
             admitted.append(seq)
         return admitted
 
@@ -238,6 +256,8 @@ class Scheduler:
         seq.preempt()
         self.queue.appendleft(seq)
         self.stats.preemptions += 1
+        if self.telemetry is not None:
+            self.telemetry.on_preempt(seq.rid)
         return slot
 
     def preempt_victim(self) -> Optional[Sequence]:

@@ -240,7 +240,13 @@ class DraftModelProposer:
     def reset_run(self) -> None:
         """Fresh ledger + slot state for a new serve() run (the draft's
         jitted step and arena storage stay warm — compilations are not
-        repaid, mirroring ``ServingEngine.reset``)."""
+        repaid, mirroring ``ServingEngine.reset``).
+
+        The engine calls this BEFORE constructing the run's telemetry
+        ``StepTimeline``, which then attaches its charge tap to this
+        fresh ledger — so per-step ``draft_delta`` cells in the timeline
+        close bit-exactly against this account's ``breakdown()``, same
+        contract as the main ledger."""
         self.ledger = TransferLedger(self.model.cfg, self.quant,
                                      dp=self.dp, tp=self.tp)
         self.steps = 0

@@ -62,7 +62,7 @@ nothing — the live analog of Table 2's per-format offload ratios.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.coalesce import TransferModel
@@ -136,6 +136,10 @@ class TransferLedger:
         self._kv_stream_scale = kv_quant_stream_scale(cfg, kv_quant)
         # {phase: {category: {direction: bytes}}}
         self._cells: Dict[str, Dict[str, Dict[str, float]]] = {}
+        # Charge tap (telemetry.StepTimeline): observes every charge in
+        # fold order, so an external accumulator can mirror the cells
+        # bit-exactly. None when no observer is attached.
+        self._tap: Optional[Callable[[str, str, str, float], None]] = None
         self.tokens: Dict[str, int] = {p: 0 for p in PHASES}
         # Prompt positions satisfied from shared prefix-cache pages:
         # never streamed, never computed — the whole point of prefix
@@ -147,10 +151,45 @@ class TransferLedger:
     # -- raw charge ------------------------------------------------------
     def charge(self, phase: str, category: str, direction: str,
                nbytes: float) -> None:
-        """Add ``nbytes`` to the (phase, category, direction) cell."""
+        """Add ``nbytes`` to the (phase, category, direction) cell.
+
+        The single entry point for ALL byte accounting — every wrapper
+        (chunk charges, cache growth, table uploads, sampled drains)
+        lands here, so the attached tap (if any) observes the complete
+        charge stream in cell-fold order: an accumulator driven by the
+        tap with the same per-charge additions reproduces the cells
+        bit-exactly (the telemetry closure guarantee)."""
+        nbytes = float(nbytes)
         by_cat = self._cells.setdefault(phase, {})
         by_dir = by_cat.setdefault(category, {})
-        by_dir[direction] = by_dir.get(direction, 0.0) + float(nbytes)
+        by_dir[direction] = by_dir.get(direction, 0.0) + nbytes
+        if self._tap is not None:
+            self._tap(phase, category, direction, nbytes)
+
+    def attach_tap(self, fn: Callable[[str, str, str, float], None]
+                   ) -> None:
+        """Attach a charge observer called as ``fn(phase, category,
+        direction, nbytes)`` on every charge. One observer at a time —
+        attaching over a live tap raises (a silently replaced tap would
+        break the first observer's closure guarantee)."""
+        if self._tap is not None:
+            raise RuntimeError("TransferLedger already has a tap "
+                               "attached; detach it first")
+        self._tap = fn
+
+    def detach_tap(self) -> None:
+        """Remove the charge observer (no-op when none is attached)."""
+        self._tap = None
+
+    def flat_cells(self) -> Dict[Tuple[str, str, str], float]:
+        """Cheap flat snapshot: {(phase, category, direction): bytes}.
+        The delta of two snapshots is a between-points byte breakdown;
+        for *bit-exact* series use the tap (float addition does not
+        telescope exactly across snapshot diffs)."""
+        return {(p, c, d): b
+                for p, cats in self._cells.items()
+                for c, by_dir in cats.items()
+                for d, b in by_dir.items()}
 
     # -- phase-level charges ---------------------------------------------
     def charge_prefill(self, seq: int, batch: int = 1) -> None:
@@ -384,14 +423,9 @@ class TransferLedger:
                         f" | LOAD share {frac*100:5.1f}%"
             lines.append(line)
         lines.append(f"bytes/generated-token: {self.bytes_per_token()/1e6:.3f} MB")
-        if self.dp * self.tp > 1:
-            lines.append(
-                f"per-device (dp={self.dp} tp={self.tp}) "
-                f"bytes/generated-token: "
-                f"{self.per_device_bytes_per_token()/1e6:.3f} MB | "
-                f"weight-stream/token: "
-                f"{self.per_device_weight_stream_bytes_per_token()/1e6:.3f}"
-                f" MB")
+        # Per-device figures are NOT repeated here: the serve report's
+        # mesh line (telemetry.serve_report_lines) is their one home —
+        # the two used to drift.
         return lines
 
 
